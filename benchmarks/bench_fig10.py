@@ -1,0 +1,30 @@
+"""Paper Fig. 10: RO-I/II/III vs Swap across sizes and PC densities.
+
+Normalized SCM (vs the random initial plan), averaged over repetitions,
+for PCs in {20, 40, 60, 80}% and n in {20, 40, 60, 80, 100}.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import random_flow, random_plan, ro1, ro2, ro3, scm, swap
+
+
+def run(reps: int = 15) -> list[dict]:
+    rows = []
+    for pc in (0.2, 0.4, 0.6, 0.8):
+        for n in (20, 40, 60, 80, 100):
+            acc = {"swap": [], "ro1": [], "ro2": [], "ro3": []}
+            for i in range(reps):
+                f = random_flow(n, pc, rng=1000 * n + i)
+                c0 = scm(f, random_plan(f, i))
+                acc["swap"].append(swap(f, rng=i)[1] / c0)
+                acc["ro1"].append(ro1(f)[1] / c0)
+                acc["ro2"].append(ro2(f)[1] / c0)
+                acc["ro3"].append(ro3(f)[1] / c0)
+            for k, v in acc.items():
+                rows.append(
+                    {"bench": "fig10", "pc": int(pc * 100), "n": n,
+                     "algo": k, "normalized_scm": round(float(np.mean(v)), 4)}
+                )
+    return rows

@@ -1,0 +1,34 @@
+"""Paper Fig. 11: MIMO butterfly flows (10 segments of 10 / 20 tasks),
+PCs=40%: improvement of segment-wise RO-III vs segment-wise Swap vs the
+non-optimized flow."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import (
+    butterfly, butterfly_mimo_segments, optimize_mimo, ro3, swap,
+)
+
+
+def run(reps: int = 5) -> list[dict]:
+    rows = []
+    for seg_size, total in ((10, 100), (20, 200)):
+        imp_swap, imp_ro3 = [], []
+        for i in range(reps):
+            segs = butterfly_mimo_segments(10, seg_size, 0.4, rng=i)
+            m1 = butterfly(segs)
+            before = m1.total_cost()
+            after_swap = optimize_mimo(m1, lambda f: swap(f, rng=0))
+            m2 = butterfly(butterfly_mimo_segments(10, seg_size, 0.4, rng=i))
+            after_ro3 = optimize_mimo(m2, ro3)
+            imp_swap.append(1 - after_swap / before)
+            imp_ro3.append(1 - after_ro3 / before)
+        rows.append(
+            {"bench": "fig11", "total_tasks": total, "algo": "swap",
+             "avg_improvement": round(float(np.mean(imp_swap)), 4)}
+        )
+        rows.append(
+            {"bench": "fig11", "total_tasks": total, "algo": "ro3",
+             "avg_improvement": round(float(np.mean(imp_ro3)), 4)}
+        )
+    return rows

@@ -1,0 +1,65 @@
+"""Paper Fig. 12: time overhead of the exact algorithms.
+
+DP vs TopSort scaling in n at 50% PCs (top-left), TopSort under 98% PCs
+(top-right), TopSort vs PC density (bottom-left), Backtracking vs TopSort
+under dense constraints (bottom-right).  Ranges are reduced vs the paper's
+(their 20-task DP point took 3 days); the scaling *shape* is the claim.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import backtracking, dp, random_flow, topsort
+
+
+def _time(fn, *args) -> float:
+    t0 = time.perf_counter()
+    fn(*args)
+    return time.perf_counter() - t0
+
+
+def run(reps: int = 3) -> list[dict]:
+    rows = []
+    # DP vs TopSort, 50% PCs
+    for n in (10, 12, 14):
+        td = np.mean([_time(dp, random_flow(n, 0.5, rng=i)) for i in range(reps)])
+        tt = np.mean(
+            [_time(topsort, random_flow(n, 0.5, rng=i)) for i in range(reps)]
+        )
+        rows.append({"bench": "fig12_dp_vs_topsort", "n": n, "pc": 50,
+                     "algo": "dp", "seconds": round(float(td), 4)})
+        rows.append({"bench": "fig12_dp_vs_topsort", "n": n, "pc": 50,
+                     "algo": "topsort", "seconds": round(float(tt), 4)})
+    # TopSort scales to medium flows under very dense constraints
+    for n in (10, 20, 30, 40, 50):
+        tt = np.mean(
+            [_time(topsort, random_flow(n, 0.98, rng=i)) for i in range(reps)]
+        )
+        rows.append({"bench": "fig12_topsort_dense", "n": n, "pc": 98,
+                     "algo": "topsort", "seconds": round(float(tt), 4)})
+    # TopSort vs PC density at fixed n
+    for pc in (0.5, 0.7, 0.9, 0.98):
+        tt = np.mean(
+            [_time(topsort, random_flow(14, pc, rng=i)) for i in range(reps)]
+        )
+        rows.append({"bench": "fig12_topsort_pc", "n": 14,
+                     "pc": int(pc * 100), "algo": "topsort",
+                     "seconds": round(float(tt), 4)})
+    # Backtracking vs TopSort under dense constraints
+    for pc in (0.9, 0.95, 0.98):
+        tb = np.mean(
+            [_time(backtracking, random_flow(14, pc, rng=i))
+             for i in range(reps)]
+        )
+        tt = np.mean(
+            [_time(topsort, random_flow(14, pc, rng=i)) for i in range(reps)]
+        )
+        rows.append({"bench": "fig12_bt_vs_topsort", "n": 14,
+                     "pc": int(pc * 100), "algo": "backtracking",
+                     "seconds": round(float(tb), 4)})
+        rows.append({"bench": "fig12_bt_vs_topsort", "n": 14,
+                     "pc": int(pc * 100), "algo": "topsort",
+                     "seconds": round(float(tt), 4)})
+    return rows

@@ -1,0 +1,61 @@
+"""Kernel-level validation of the paper's model (beyond-paper).
+
+filter_chain's block-early-exit makes expected per-block predicate work an
+SCM with block-level selectivities; we count actually-evaluated predicates
+per ordering (simulated exactly from the data) and compare optimizer-chosen
+vs authored vs worst orderings.  Flash-attention numbers are interpret-mode
+correctness + the analytic VMEM tile sizes used by the BlockSpecs.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import Flow, ro3, scm
+
+
+def _block_evals(mask_per_pred: np.ndarray, order, block: int) -> int:
+    """#predicate evaluations with block-level early exit, exactly."""
+    n = mask_per_pred.shape[1]
+    evals = 0
+    for s in range(0, n, block):
+        alive = np.ones(min(block, n - s), dtype=bool)
+        for k in order:
+            if not alive.any():
+                break
+            evals += 1
+            alive &= mask_per_pred[k, s : s + alive.shape[0]]
+    return evals
+
+
+def run(reps: int = 5, n_rows: int = 65_536, block: int = 1024) -> list[dict]:
+    rng = np.random.default_rng(0)
+    rows = []
+    for rep in range(reps):
+        K = 6
+        sels = rng.uniform(0.05, 0.9, size=K)
+        costs = np.ones(K)  # range predicates cost the same per row
+        data = rng.uniform(0, 1, size=(K, n_rows))
+        mask_per_pred = data < sels[:, None]
+        flow = Flow(costs, sels, ())
+        opt_order, _ = ro3(flow)
+        naive = list(range(K))
+        worst = list(np.argsort(sels))[::-1]  # least selective first
+        e_opt = _block_evals(mask_per_pred, opt_order, block)
+        e_naive = _block_evals(mask_per_pred, naive, block)
+        e_worst = _block_evals(mask_per_pred, worst, block)
+        rows.append(
+            {"bench": "kernel_filter_chain", "rep": rep,
+             "evals_optimized": e_opt, "evals_authored": e_naive,
+             "evals_worst": e_worst,
+             "saving_vs_worst": round(1 - e_opt / e_worst, 4)}
+        )
+    # flash attention tile accounting (BlockSpec VMEM budget)
+    bq, bk, d = 128, 128, 128
+    vmem = (bq * d + 2 * bk * d + bq * d + 2 * bq) * 4  # q,k,v,acc,m,l f32
+    rows.append(
+        {"bench": "kernel_flash_tiles", "rep": 0,
+         "evals_optimized": f"bq={bq}", "evals_authored": f"bk={bk}",
+         "evals_worst": f"d={d}",
+         "saving_vs_worst": f"{vmem/2**20:.2f}MiB_VMEM"}
+    )
+    return rows

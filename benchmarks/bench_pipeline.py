@@ -1,0 +1,54 @@
+"""Executable-pipeline validation: measured wall-clock vs SCM prediction.
+
+The SCM model predicts plan cost from measured per-op cost/selectivity;
+this bench reports predicted-vs-measured for initial / Swap / RO-III /
+exact plans on the §3 case study over real (synthetic) records — our
+analogue of the paper's PDI validation.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import ro3, scm, swap, topsort
+from repro.pipeline import FlowStats, HostExecutor
+from repro.pipeline.case_study import (
+    case_study_extra_edges, case_study_ops, make_tweets,
+)
+
+
+def run(reps: int = 3, n_rows: int = 500_000) -> list[dict]:
+    ops = case_study_ops()
+    stats = FlowStats(ops, extra_edges=case_study_extra_edges())
+    ex = HostExecutor(ops, stats=stats)
+    tweets = make_tweets(n_rows, seed=1)
+    init = list(range(13))
+    ex.run(tweets, init)  # measure costs
+    flow = stats.to_flow()
+    plans = {
+        "initial": init,
+        "swap": swap(flow, initial=list(init))[0],
+        "ro3": ro3(flow)[0],
+        "exact": topsort(flow)[0],
+    }
+    rows = []
+    base_scm = scm(flow, init)
+    base_wall = None
+    for name, order in plans.items():
+        ex.run(tweets, order)  # warm
+        ts = []
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            ex.run(tweets, order)
+            ts.append(time.perf_counter() - t0)
+        wall = float(np.median(ts))
+        if base_wall is None:
+            base_wall = wall
+        rows.append(
+            {"bench": "pipeline_validation", "plan": name,
+             "predicted_scm_ratio": round(scm(flow, order) / base_scm, 4),
+             "measured_wall_ratio": round(wall / base_wall, 4),
+             "wall_ms": round(wall * 1e3, 1)}
+        )
+    return rows

@@ -1,0 +1,43 @@
+"""Paper Table 4: parallel plans — PSwap / PGreedyII / PRO-I/II/III at
+mc=0 and mc=10 (primed rows), n in {50, 100}, PCs in {20,40,60,80}%."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import (
+    parallelize, pgreedy2, random_flow, random_plan, ro1, ro2, ro3,
+    scm, scm_parallel, swap,
+)
+
+
+def run(reps: int = 10) -> list[dict]:
+    linear_algos = {
+        "PSwap": lambda f: swap(f, rng=0)[0],
+        "PRO-I": lambda f: ro1(f)[0],
+        "PRO-II": lambda f: ro2(f)[0],
+        "PRO-III": lambda f: ro3(f)[0],
+    }
+    rows = []
+    for n in (50, 100):
+        for pc in (0.2, 0.4, 0.6, 0.8):
+            acc: dict[str, list[float]] = {}
+            for i in range(reps):
+                f = random_flow(n, pc, rng=31_000 + n * 10 + i)
+                c0 = scm(f, random_plan(f, i))
+                for name, fn in linear_algos.items():
+                    order = fn(f)
+                    plan = parallelize(f, order)
+                    for mc, suffix in ((0.0, ""), (10.0, "'")):
+                        acc.setdefault(name + suffix, []).append(
+                            scm_parallel(plan, mc=mc) / c0
+                        )
+                for mc, suffix in ((0.0, ""), (10.0, "'")):
+                    _, c = pgreedy2(f, mc=mc)
+                    acc.setdefault("PGreedyII" + suffix, []).append(c / c0)
+            for name, v in acc.items():
+                rows.append(
+                    {"bench": "table4", "n": n, "pc": int(pc * 100),
+                     "algo": name,
+                     "normalized_scm": round(float(np.mean(v)), 4)}
+                )
+    return rows

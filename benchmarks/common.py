@@ -1,0 +1,32 @@
+"""Shared helpers for the per-table benchmarks."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import random_flow, random_plan, scm
+
+
+def normalized(flow, order) -> float:
+    """SCM normalized by the random-initial-plan SCM (paper's basis)."""
+    init = random_plan(flow, 0)
+    return scm(flow, order) / scm(flow, init)
+
+
+def rows_to_csv(rows: list[dict]) -> str:
+    if not rows:
+        return ""
+    keys = list(rows[0])
+    out = [",".join(keys)]
+    for r in rows:
+        out.append(",".join(str(r[k]) for k in keys))
+    return "\n".join(out)
+
+
+def gen_flows(n, pc, reps, dist="uniform", seed0=0):
+    return [
+        random_flow(
+            n, pc, rng=seed0 + i, distribution=dist,
+            beta_params=(0.5, 0.5),
+        )
+        for i in range(reps)
+    ]

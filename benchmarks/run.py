@@ -1,0 +1,65 @@
+"""Benchmark driver: one module per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run [--only fig10,table3] [--reps N]
+
+Prints CSV blocks per benchmark and writes benchmarks/results/*.csv.
+"""
+from __future__ import annotations
+
+import argparse
+import importlib
+import os
+import time
+
+from .common import rows_to_csv
+
+BENCHES = [
+    "case_study",  # §3, Figures 2-4
+    "fig5",        # exact-vs-heuristic gap, 15 tasks
+    "fig10",       # RO-* vs Swap across n and PC density
+    "table3",      # uniform vs beta distributions
+    "table4",      # parallel plans, mc in {0, 10}
+    "fig11",       # MIMO butterfly
+    "fig12",       # exact-algorithm time overhead
+    "pipeline",    # executable SCM-vs-wall-clock validation
+    "kernels",     # kernel-level SCM validation
+]
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset of: " + ",".join(BENCHES))
+    ap.add_argument("--reps", type=int, default=None,
+                    help="override repetitions (smaller = faster)")
+    args = ap.parse_args(argv)
+    only = args.only.split(",") if args.only else BENCHES
+
+    outdir = os.path.join(os.path.dirname(__file__), "results")
+    os.makedirs(outdir, exist_ok=True)
+    failures = []
+    for name in BENCHES:
+        if name not in only:
+            continue
+        mod = importlib.import_module(f".bench_{name}", __package__)
+        t0 = time.time()
+        try:
+            rows = mod.run(**({"reps": args.reps} if args.reps else {}))
+        except Exception:  # noqa: BLE001
+            import traceback
+
+            traceback.print_exc()
+            failures.append(name)
+            continue
+        csv = rows_to_csv(rows)
+        path = os.path.join(outdir, f"{name}.csv")
+        with open(path, "w") as f:
+            f.write(csv + "\n")
+        print(f"# ===== {name} ({time.time()-t0:.1f}s) -> {path}")
+        print(csv)
+        print()
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

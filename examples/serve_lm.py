@@ -1,0 +1,21 @@
+"""Example: batched serving (prefill + decode with KV cache) of a small
+model — the same serve path the dry-run lowers onto the production mesh.
+
+  PYTHONPATH=src python examples/serve_lm.py
+"""
+import sys
+
+from repro.launch.serve import main as serve_main
+
+if __name__ == "__main__":
+    sys.exit(
+        serve_main(
+            [
+                "--arch", "gemma3-1b",
+                "--scale", "0.25",
+                "--batch", "4",
+                "--prompt-len", "64",
+                "--gen", "32",
+            ]
+        )
+    )

@@ -1,0 +1,27 @@
+"""End-to-end example: train a ~100M-param qwen2-family model for a few
+hundred steps on the flow-optimized input pipeline, with checkpointing.
+
+  PYTHONPATH=src python examples/train_lm.py [--steps 300]
+"""
+import argparse
+import sys
+
+from repro.launch.train import main as train_main
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    args = ap.parse_args()
+    sys.exit(
+        train_main(
+            [
+                "--arch", "qwen2-0.5b",
+                "--steps", str(args.steps),
+                "--batch", "8",
+                "--seq", "256",
+                "--scale", "0.45",  # ~100M-param variant of the family
+                "--ckpt-dir", "/tmp/repro_ckpt_qwen",
+                "--ckpt-every", "100",
+            ]
+        )
+    )

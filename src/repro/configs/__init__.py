@@ -1,0 +1,13 @@
+from .registry import ARCHS, get_config, get_smoke, get_train_plan, list_archs
+from .shapes import SHAPES, input_specs, shape_skips
+
+__all__ = [
+    "ARCHS",
+    "get_config",
+    "get_smoke",
+    "get_train_plan",
+    "list_archs",
+    "SHAPES",
+    "input_specs",
+    "shape_skips",
+]

@@ -1,0 +1,60 @@
+"""deepseek-v3-671b [arXiv:2412.19437; hf:deepseek-ai/DeepSeek-V3].
+
+61L d_model=7168 128 heads, MLA (q_lora 1536, kv_lora 512, qk 128+64 rope,
+v 128); MoE: 1 shared + 256 routed experts top-8, d_ff_expert=2048, first 3
+layers dense (d_ff 18432 per the paper).  MTP (multi-token prediction) is a
+training-objective head and is omitted — noted in DESIGN.md.
+
+Trains with Adafactor: Adam f32 states for 671B params (~5.4 TB) cannot fit
+512 v5e chips; factored stats can.  FSDP + EP sharding (see
+distributed.sharding)."""
+from ..models.config import MLAConfig, ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="deepseek-v3-671b",
+    d_model=7168,
+    n_layers=61,
+    vocab=129280,
+    n_heads=128,
+    n_kv_heads=128,
+    rope_theta=1e4,
+    d_ff=18432,  # dense layers (first_k_dense); experts use d_ff_expert
+    mla=MLAConfig(
+        q_lora_rank=1536,
+        kv_lora_rank=512,
+        qk_nope_dim=128,
+        qk_rope_dim=64,
+        v_head_dim=128,
+    ),
+    moe=MoEConfig(
+        num_experts=256,
+        top_k=8,
+        d_ff_expert=2048,
+        n_shared=1,
+        first_k_dense=3,
+        capacity_factor=1.25,
+    ),
+    tie_embeddings=False,
+    loss_chunk=512,
+)
+
+SMOKE = ModelConfig(
+    name="deepseek-v3-smoke",
+    d_model=64,
+    n_layers=3,
+    vocab=256,
+    n_heads=4,
+    n_kv_heads=4,
+    d_ff=192,
+    mla=MLAConfig(
+        q_lora_rank=32, kv_lora_rank=16, qk_nope_dim=16, qk_rope_dim=8,
+        v_head_dim=16,
+    ),
+    moe=MoEConfig(
+        num_experts=8, top_k=2, d_ff_expert=32, n_shared=1,
+        first_k_dense=1, capacity_factor=2.0,
+    ),
+    dtype="float32",
+)
+
+TRAIN_PLAN = {"accum_steps": 8, "optimizer": "adafactor", "fsdp": True}

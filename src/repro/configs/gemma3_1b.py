@@ -1,0 +1,39 @@
+"""gemma3-1b [hf:google/gemma-3-1b-pt; unverified tier].
+
+26L d_model=1152 4H (GQA kv=1) d_ff=6912 vocab=262144 — 5:1 local:global
+sliding-window pattern (window 512), head_dim 256, 128k-class context via
+the sliding windows; the single global layer per group is the long-range
+path."""
+from ..models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="gemma3-1b",
+    d_model=1152,
+    n_layers=26,
+    vocab=262144,
+    n_heads=4,
+    n_kv_heads=1,
+    head_dim=256,
+    rope_theta=1e6,
+    window=512,
+    global_every=6,  # layers 6,12,18,24 global; rest local -> ~5:1
+    d_ff=6912,
+    tie_embeddings=True,
+    loss_chunk=256,
+)
+
+SMOKE = ModelConfig(
+    name="gemma3-smoke",
+    d_model=64,
+    n_layers=4,
+    vocab=512,  # keeps the huge-vocab flavour relative to d_model
+    n_heads=2,
+    n_kv_heads=1,
+    head_dim=32,
+    window=8,
+    global_every=2,
+    d_ff=128,
+    dtype="float32",
+)
+
+TRAIN_PLAN = {"accum_steps": 1, "optimizer": "adamw", "fsdp": False}

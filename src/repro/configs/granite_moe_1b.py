@@ -1,0 +1,35 @@
+"""granite-moe-1b-a400m [hf:ibm-granite/granite-3.0-1b-a400m-base].
+
+24L d_model=1024 16H (GQA kv=8) vocab=49155, MoE 32 experts top-8 with
+per-expert d_ff=512 (1B total / ~400M active)."""
+from ..models.config import ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="granite-moe-1b-a400m",
+    d_model=1024,
+    n_layers=24,
+    vocab=49155,
+    n_heads=16,
+    n_kv_heads=8,
+    head_dim=64,
+    rope_theta=1e4,
+    d_ff=0,
+    moe=MoEConfig(num_experts=32, top_k=8, d_ff_expert=512),
+    tie_embeddings=True,
+    loss_chunk=512,
+)
+
+SMOKE = ModelConfig(
+    name="granite-moe-smoke",
+    d_model=64,
+    n_layers=2,
+    vocab=256,
+    n_heads=4,
+    n_kv_heads=2,
+    head_dim=16,
+    d_ff=0,
+    moe=MoEConfig(num_experts=8, top_k=2, d_ff_expert=32, capacity_factor=2.0),
+    dtype="float32",
+)
+
+TRAIN_PLAN = {"accum_steps": 1, "optimizer": "adamw", "fsdp": False}

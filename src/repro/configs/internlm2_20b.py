@@ -1,0 +1,33 @@
+"""internlm2-20b [arXiv:2403.17297; hf:internlm/internlm2-20b].
+
+48L d_model=6144 48H (GQA kv=8) d_ff=16384 vocab=92544 — GQA."""
+from ..models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="internlm2-20b",
+    d_model=6144,
+    n_layers=48,
+    vocab=92544,
+    n_heads=48,
+    n_kv_heads=8,
+    head_dim=128,
+    rope_theta=1e6,
+    d_ff=16384,
+    tie_embeddings=False,
+    loss_chunk=512,
+)
+
+SMOKE = ModelConfig(
+    name="internlm2-smoke",
+    d_model=96,
+    n_layers=2,
+    vocab=256,
+    n_heads=6,
+    n_kv_heads=2,
+    head_dim=16,
+    d_ff=256,
+    tie_embeddings=False,
+    dtype="float32",
+)
+
+TRAIN_PLAN = {"accum_steps": 4, "optimizer": "adamw", "fsdp": True}

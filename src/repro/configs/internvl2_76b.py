@@ -1,0 +1,38 @@
+"""internvl2-76b [arXiv:2404.16821; unverified tier].
+
+Backbone only per the assignment: 80L d_model=8192 64H (GQA kv=8)
+d_ff=28672 vocab=128256 (the InternLM2/Llama3-class decoder).  The InternViT
+frontend is a STUB: input_specs supplies 256 precomputed patch embeddings
+(B, 256, 8192) prepended to the token sequence."""
+from ..models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="internvl2-76b",
+    d_model=8192,
+    n_layers=80,
+    vocab=128256,
+    n_heads=64,
+    n_kv_heads=8,
+    head_dim=128,
+    rope_theta=5e5,
+    d_ff=28672,
+    prefix_embeddings=256,
+    tie_embeddings=False,
+    loss_chunk=512,
+)
+
+SMOKE = ModelConfig(
+    name="internvl2-smoke",
+    d_model=64,
+    n_layers=2,
+    vocab=256,
+    n_heads=4,
+    n_kv_heads=2,
+    head_dim=16,
+    d_ff=128,
+    prefix_embeddings=8,
+    tie_embeddings=False,
+    dtype="float32",
+)
+
+TRAIN_PLAN = {"accum_steps": 8, "optimizer": "adafactor", "fsdp": True}

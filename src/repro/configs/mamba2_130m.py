@@ -1,0 +1,34 @@
+"""mamba2-130m [arXiv:2405.21060; hf:state-spaces/mamba2-130m].
+
+24L d_model=768, attention-free SSD (state-space duality), ssm_state=128,
+expand 2 (d_inner 1536), head_dim 64 -> 24 SSD heads, vocab=50280."""
+from ..models.config import ModelConfig, SSMConfig
+
+CONFIG = ModelConfig(
+    name="mamba2-130m",
+    d_model=768,
+    n_layers=24,
+    vocab=50280,
+    block_type="ssm",
+    ssm=SSMConfig(
+        d_state=128, n_heads=24, head_dim=64, n_groups=1, conv_width=4,
+        expand=2, chunk=128,
+    ),
+    tie_embeddings=True,
+    loss_chunk=512,
+)
+
+SMOKE = ModelConfig(
+    name="mamba2-smoke",
+    d_model=64,
+    n_layers=2,
+    vocab=256,
+    block_type="ssm",
+    ssm=SSMConfig(
+        d_state=16, n_heads=4, head_dim=32, n_groups=1, conv_width=4,
+        expand=2, chunk=16,
+    ),
+    dtype="float32",
+)
+
+TRAIN_PLAN = {"accum_steps": 1, "optimizer": "adamw", "fsdp": False}

@@ -1,0 +1,35 @@
+"""qwen2-0.5b [arXiv:2407.10671; hf:Qwen/Qwen2-0.5B].
+
+24L d_model=896 14H (GQA kv=2) d_ff=4864 vocab=151936 — GQA with QKV bias,
+head_dim 64, RoPE theta 1e6, tied embeddings."""
+from ..models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2-0.5b",
+    d_model=896,
+    n_layers=24,
+    vocab=151936,
+    n_heads=14,
+    n_kv_heads=2,
+    head_dim=64,
+    qkv_bias=True,
+    rope_theta=1e6,
+    d_ff=4864,
+    tie_embeddings=True,
+    loss_chunk=512,
+)
+
+SMOKE = ModelConfig(
+    name="qwen2-smoke",
+    d_model=64,
+    n_layers=2,
+    vocab=256,
+    n_heads=4,  # keeps the non-divisible-heads flavour at tiny scale
+    n_kv_heads=2,
+    head_dim=16,
+    qkv_bias=True,
+    d_ff=128,
+    dtype="float32",
+)
+
+TRAIN_PLAN = {"accum_steps": 1, "optimizer": "adamw", "fsdp": False}

@@ -1,0 +1,43 @@
+"""Architecture registry: ``--arch <id>`` resolution."""
+from __future__ import annotations
+
+import importlib
+
+from ..models.config import ModelConfig
+
+ARCHS: dict[str, str] = {
+    "qwen2-0.5b": "qwen2_0_5b",
+    "starcoder2-15b": "starcoder2_15b",
+    "gemma3-1b": "gemma3_1b",
+    "internlm2-20b": "internlm2_20b",
+    "granite-moe-1b-a400m": "granite_moe_1b",
+    "deepseek-v3-671b": "deepseek_v3_671b",
+    "zamba2-2.7b": "zamba2_2_7b",
+    "whisper-tiny": "whisper_tiny",
+    "internvl2-76b": "internvl2_76b",
+    "mamba2-130m": "mamba2_130m",
+}
+
+
+def _module(arch: str):
+    if arch not in ARCHS:
+        raise KeyError(
+            f"unknown arch {arch!r}; available: {sorted(ARCHS)}"
+        )
+    return importlib.import_module(f".{ARCHS[arch]}", __package__)
+
+
+def get_config(arch: str) -> ModelConfig:
+    return _module(arch).CONFIG
+
+
+def get_smoke(arch: str) -> ModelConfig:
+    return _module(arch).SMOKE
+
+
+def get_train_plan(arch: str) -> dict:
+    return dict(_module(arch).TRAIN_PLAN)
+
+
+def list_archs() -> list[str]:
+    return list(ARCHS)

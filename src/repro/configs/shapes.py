@@ -1,0 +1,85 @@
+"""Assigned input shapes x per-arch applicability.
+
+LM shapes are seq_len x global_batch; ``decode_*``/``long_*`` lower
+``serve_step`` (one token against a seq_len cache), not ``train_step``.
+``long_500k`` requires sub-quadratic attention: it runs for ssm/hybrid and
+for gemma3 (5:1 sliding-window layers; its periodic global layer decodes
+O(L) against a batch-1 cache) and is skipped for pure full-attention archs
+— the skip table below is the DESIGN.md §long-context policy in code.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..models.config import ModelConfig
+from ..models import transformer as T
+
+SHAPES: dict[str, dict] = {
+    "train_4k": {"kind": "train", "seq": 4096, "batch": 256},
+    "prefill_32k": {"kind": "prefill", "seq": 32768, "batch": 32},
+    "decode_32k": {"kind": "decode", "seq": 32768, "batch": 128},
+    "long_500k": {"kind": "decode", "seq": 524288, "batch": 1},
+}
+
+_FULL_ATTENTION = {
+    "qwen2-0.5b",
+    "starcoder2-15b",
+    "internlm2-20b",
+    "granite-moe-1b-a400m",
+    "deepseek-v3-671b",  # MLA is full attention in latent space
+    "whisper-tiny",
+    "internvl2-76b",
+}
+
+
+def shape_skips(arch: str) -> dict[str, str]:
+    """shape -> reason, for cells that must not run."""
+    skips = {}
+    if arch in _FULL_ATTENTION:
+        skips["long_500k"] = (
+            "pure full attention: 500k decode is quadratic-cost/O(L)-cache "
+            "with no sub-quadratic path (DESIGN.md long-context policy)"
+        )
+    return skips
+
+
+def _struct(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(
+    cfg: ModelConfig, shape_name: str, batch_override: int | None = None
+) -> dict:
+    """ShapeDtypeStruct stand-ins for every input of the step function.
+
+    For ``train``: the (tokens, labels) batch [+ modality stubs].
+    For ``prefill``: the prompt batch [+ modality stubs].
+    For ``decode``: one-token batch + position + a full-length cache.
+    """
+    sh = SHAPES[shape_name]
+    B = batch_override or sh["batch"]
+    S = sh["seq"]
+    tok_dt = jnp.int32
+    act_dt = jnp.dtype(cfg.dtype)
+    specs: dict = {}
+    if sh["kind"] in ("train", "prefill"):
+        S_tok = S - cfg.prefix_embeddings  # total positions = S
+        specs["tokens"] = _struct((B, S_tok), tok_dt)
+        if sh["kind"] == "train":
+            specs["labels"] = _struct((B, S_tok), tok_dt)
+        if cfg.prefix_embeddings:
+            specs["prefix"] = _struct(
+                (B, cfg.prefix_embeddings, cfg.d_model), act_dt
+            )
+        if cfg.is_encdec:
+            specs["enc_inputs"] = _struct(
+                (B, cfg.encoder_seq, cfg.d_model), act_dt
+            )
+    else:  # decode
+        specs["tokens"] = _struct((B, 1), tok_dt)
+        specs["pos"] = _struct((), jnp.int32)
+        specs["cache"] = jax.eval_shape(
+            lambda: T.init_cache(cfg, B, S)
+        )
+    return specs

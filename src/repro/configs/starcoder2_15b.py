@@ -1,0 +1,35 @@
+"""starcoder2-15b [arXiv:2402.19173; hf:bigcode/starcoder2-15b].
+
+40L d_model=6144 48H (GQA kv=4) d_ff=24576 vocab=49152 — GQA + RoPE,
+plain-GELU (non-gated) MLP as published -> 15.3B params."""
+from ..models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="starcoder2-15b",
+    d_model=6144,
+    n_layers=40,
+    vocab=49152,
+    n_heads=48,
+    n_kv_heads=4,
+    head_dim=128,
+    rope_theta=1e5,
+    d_ff=24576,
+    mlp_gated=False,
+    tie_embeddings=False,
+    loss_chunk=512,
+)
+
+SMOKE = ModelConfig(
+    name="starcoder2-smoke",
+    d_model=96,
+    n_layers=2,
+    vocab=256,
+    n_heads=6,
+    n_kv_heads=2,
+    head_dim=16,
+    d_ff=384,
+    tie_embeddings=False,
+    dtype="float32",
+)
+
+TRAIN_PLAN = {"accum_steps": 4, "optimizer": "adamw", "fsdp": True}

@@ -1,0 +1,39 @@
+"""whisper-tiny [arXiv:2212.04356; unverified tier].
+
+Encoder-decoder, 4+4L d_model=384 6H d_ff=1536 vocab=51865.  The conv/mel
+frontend is a STUB per the assignment: input_specs supplies precomputed
+frame embeddings (B, 1500, 384).  Decoder self-attention uses RoPE instead
+of Whisper's learned positions so 32k-length decode shapes stay
+parameter-free — noted in DESIGN.md."""
+from ..models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-tiny",
+    d_model=384,
+    n_layers=4,
+    vocab=51865,
+    n_heads=6,
+    n_kv_heads=6,
+    head_dim=64,
+    d_ff=1536,
+    encoder_layers=4,
+    encoder_seq=1500,
+    tie_embeddings=True,
+    loss_chunk=512,
+)
+
+SMOKE = ModelConfig(
+    name="whisper-smoke",
+    d_model=64,
+    n_layers=2,
+    vocab=256,
+    n_heads=4,
+    n_kv_heads=4,
+    head_dim=16,
+    d_ff=128,
+    encoder_layers=2,
+    encoder_seq=24,
+    dtype="float32",
+)
+
+TRAIN_PLAN = {"accum_steps": 1, "optimizer": "adamw", "fsdp": False}

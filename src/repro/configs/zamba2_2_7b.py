@@ -1,0 +1,47 @@
+"""zamba2-2.7b [arXiv:2411.15242; hf:Zyphra/Zamba2-2.7B].
+
+54 Mamba2 layers d_model=2560 (ssm_state=64) + a shared full-attention
+block (32H, d_ff=10240) applied every 6 layers with fresh KV each
+application — the weight-shared hybrid.  (Zamba2 alternates two shared
+blocks with LoRA deltas; we share one block — noted in DESIGN.md.)"""
+from ..models.config import ModelConfig, SSMConfig
+
+CONFIG = ModelConfig(
+    name="zamba2-2.7b",
+    d_model=2560,
+    n_layers=54,
+    vocab=32000,
+    block_type="hybrid",
+    shared_attn_every=6,
+    n_heads=32,
+    n_kv_heads=32,
+    head_dim=80,
+    rope_theta=1e4,
+    d_ff=10240,
+    ssm=SSMConfig(
+        d_state=64, n_heads=80, head_dim=64, n_groups=1, conv_width=4,
+        expand=2, chunk=128,
+    ),
+    tie_embeddings=True,
+    loss_chunk=512,
+)
+
+SMOKE = ModelConfig(
+    name="zamba2-smoke",
+    d_model=64,
+    n_layers=4,
+    vocab=256,
+    block_type="hybrid",
+    shared_attn_every=2,
+    n_heads=4,
+    n_kv_heads=4,
+    head_dim=16,
+    d_ff=128,
+    ssm=SSMConfig(
+        d_state=16, n_heads=4, head_dim=32, n_groups=1, conv_width=4,
+        expand=2, chunk=16,
+    ),
+    dtype="float32",
+)
+
+TRAIN_PLAN = {"accum_steps": 2, "optimizer": "adamw", "fsdp": False}

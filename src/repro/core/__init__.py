@@ -1,0 +1,21 @@
+# The paper's primary contribution: cost-based task re-ordering for data
+# flows (Kougka & Gounaris 2015).  Pure algorithmic layer; the executable
+# substrate lives in repro.pipeline and the ML framework around it.
+from .cost import PrefixState, scm, scm_parallel, swap_delta
+from .exact import backtracking, dp, topsort
+from .flow import Flow, ParallelPlan
+from .generators import butterfly_mimo_segments, case_study_flow, random_flow
+from .heuristics import greedy1, greedy2, partition, random_plan, swap
+from .mimo import MIMOFlow, Segment, butterfly, optimize_mimo
+from .parallel import parallelize, pgreedy1, pgreedy2
+from .rank import kbz, ro1, ro2, ro3
+
+__all__ = [
+    "Flow", "ParallelPlan", "scm", "scm_parallel", "swap_delta", "PrefixState",
+    "backtracking", "dp", "topsort",
+    "swap", "greedy1", "greedy2", "partition", "random_plan",
+    "kbz", "ro1", "ro2", "ro3",
+    "parallelize", "pgreedy1", "pgreedy2",
+    "MIMOFlow", "Segment", "butterfly", "optimize_mimo",
+    "random_flow", "case_study_flow", "butterfly_mimo_segments",
+]

@@ -1,0 +1,124 @@
+"""Sum Cost Metric (SCM) evaluation for linear and parallel plans.
+
+SCM(G) = sum_i inp_i * c_i with inp_i = prod of selectivities of all tasks
+preceding t_i in G (paper §2).  For parallel plans, "preceding" = ancestors
+in the execution DAG, and each task with in-degree >= 2 additionally incurs
+a merge activity of cost ``mc`` charged at the merge's input volume (§6).
+
+Also provides the O(1) incremental deltas used by TopSort and RO-III:
+
+* adjacent swap  A|x y|R -> A|y x|R :
+    delta = P * (c_y + sel_y c_x - c_x - sel_x c_y),  P = selprod(A)
+* block move     A|B|M|R -> A|M|B|R :
+    delta = P * [ W_M (1 - s_B) + W_B (s_M - 1) ]
+  where s_X = selprod(X) and W_X = sum over X, in order, of c * (sel-prefix
+  within X) — the segment's "standalone" SCM weight.  Both follow from the
+  prefix-product factorization of SCM; R's contribution is unchanged because
+  segment selectivity products commute.
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import numpy as np
+
+from .flow import Flow, ParallelPlan
+
+__all__ = [
+    "scm",
+    "scm_parallel",
+    "PrefixState",
+    "swap_delta",
+    "block_move_delta",
+]
+
+
+def scm(flow: Flow, order: Sequence[int]) -> float:
+    """SCM of a linear plan (permutation of all tasks)."""
+    c = flow.cost
+    s = flow.sel
+    total = 0.0
+    prod = 1.0
+    for v in order:
+        total += prod * c[v]
+        prod *= s[v]
+    return total
+
+
+def scm_parallel(plan: ParallelPlan, mc: float = 0.0) -> float:
+    """SCM of a parallel plan with merge cost ``mc`` (paper §6)."""
+    flow = plan.flow
+    anc = plan.ancestors_masks()
+    total = 0.0
+    for v in range(flow.n):
+        inp = 1.0
+        m = anc[v]
+        while m:
+            j = (m & -m).bit_length() - 1
+            inp *= flow.sel[j]
+            m &= m - 1
+        total += inp * flow.cost[v]
+        if len(plan.parents[v]) >= 2:
+            total += inp * mc
+    return total
+
+
+class PrefixState:
+    """Prefix arrays for O(1) segment queries over a linear plan.
+
+    S[i]  = product of sel over order[0:i]          (S[0] = 1)
+    WP[i] = sum_{j<i} cost[order[j]] * S[j]         (WP[0] = 0, WP[n] = SCM)
+
+    Segment [a, b):  selprod = S[b]/S[a],  weight W = (WP[b]-WP[a])/S[a].
+    Division is safe: sel > 0 is enforced by Flow.
+    """
+
+    def __init__(self, flow: Flow, order: Sequence[int]):
+        self.flow = flow
+        self.order = list(order)
+        self._rebuild()
+
+    def _rebuild(self) -> None:
+        c = self.flow.cost
+        s = self.flow.sel
+        n = len(self.order)
+        S = np.empty(n + 1)
+        WP = np.empty(n + 1)
+        S[0] = 1.0
+        WP[0] = 0.0
+        for i, v in enumerate(self.order):
+            WP[i + 1] = WP[i] + c[v] * S[i]
+            S[i + 1] = S[i] * s[v]
+        self.S = S
+        self.WP = WP
+
+    @property
+    def total(self) -> float:
+        return float(self.WP[-1])
+
+    def seg(self, a: int, b: int) -> tuple[float, float]:
+        """(selprod, weight) of segment [a, b) of the current order."""
+        sp = self.S[b] / self.S[a]
+        w = (self.WP[b] - self.WP[a]) / self.S[a]
+        return float(sp), float(w)
+
+    def block_move_delta(self, s: int, e: int, t: int) -> float:
+        """Delta of moving block [s, e) to after position t (t >= e)."""
+        P = self.S[s]
+        sB, wB = self.seg(s, e)
+        sM, wM = self.seg(e, t)
+        return float(P * (wM * (1.0 - sB) + wB * (sM - 1.0)))
+
+    def apply_block_move(self, s: int, e: int, t: int) -> None:
+        block = self.order[s:e]
+        mid = self.order[e:t]
+        self.order[s : s + len(mid)] = mid
+        self.order[s + len(mid) : t] = block
+        self._rebuild()  # O(n); moves are rare relative to probes
+
+
+def swap_delta(flow: Flow, order: Sequence[int], k: int, S_k: float) -> float:
+    """Delta of swapping order[k], order[k+1]; S_k = selprod of order[:k]."""
+    x, y = order[k], order[k + 1]
+    c, s = flow.cost, flow.sel
+    return float(S_k * (c[y] + s[y] * c[x] - c[x] - s[x] * c[y]))

@@ -1,0 +1,275 @@
+"""Data-flow representation: tasks, precedence constraints, execution plans.
+
+Follows the paper's formulation (Kougka & Gounaris 2015, §2):
+
+* A conceptual flow is a set of tasks T = {t_1..t_n}, each a triple
+  (cost c_i, selectivity sel_i) — ``inp_i`` is position-dependent and derived.
+* PC = (T, D) is a DAG of precedence constraints; any execution plan G must
+  contain a path t_j -> t_k for every (t_j, t_k) in D.
+* A *linear* plan is a permutation of task indices; a *parallel* plan is a DAG.
+
+Implementation notes
+---------------------
+Tasks are integers 0..n-1.  Predecessor sets are kept both as adjacency sets
+and as Python-int bitmasks (fast subset tests for n <= a few hundred).  The
+constraint set is transitively closed on construction, matching the paper's
+assumption that D contains (t_a, t_c) whenever it contains (t_a, t_b) and
+(t_b, t_c).
+"""
+from __future__ import annotations
+
+import dataclasses
+import random
+from typing import Iterable, Sequence
+
+import numpy as np
+
+__all__ = [
+    "Flow",
+    "ParallelPlan",
+    "transitive_closure_masks",
+    "transitive_reduction",
+]
+
+
+def transitive_closure_masks(n: int, edges: Iterable[tuple[int, int]]) -> list[int]:
+    """Predecessor bitmasks under transitive closure.
+
+    ``pred[k]`` has bit j set iff task j must precede task k.
+    O(n * m / wordsize) via bitset DP over a topological order.
+    """
+    direct: list[set[int]] = [set() for _ in range(n)]
+    indeg = [0] * n
+    succ: list[set[int]] = [set() for _ in range(n)]
+    for a, b in edges:
+        if a == b:
+            raise ValueError(f"self-loop on task {a}")
+        if b not in succ[a]:
+            succ[a].add(b)
+            direct[b].add(a)
+            indeg[b] += 1
+    # Kahn topological order (also validates acyclicity).
+    order: list[int] = [i for i in range(n) if indeg[i] == 0]
+    head = 0
+    indeg_work = list(indeg)
+    while head < len(order):
+        u = order[head]
+        head += 1
+        for v in succ[u]:
+            indeg_work[v] -= 1
+            if indeg_work[v] == 0:
+                order.append(v)
+    if len(order) != n:
+        raise ValueError("precedence constraints contain a cycle")
+    pred = [0] * n
+    for u in order:
+        m = 0
+        for p in direct[u]:
+            m |= pred[p] | (1 << p)
+        pred[u] = m
+    return pred
+
+
+def transitive_reduction(n: int, pred_masks: Sequence[int]) -> list[set[int]]:
+    """Direct-predecessor sets of the transitive reduction of a closed DAG."""
+    reduced: list[set[int]] = [set() for _ in range(n)]
+    for v in range(n):
+        preds = [j for j in range(n) if (pred_masks[v] >> j) & 1]
+        for p in preds:
+            # p -> v is redundant iff some other pred q of v has p as its pred.
+            redundant = any(
+                (pred_masks[q] >> p) & 1 for q in preds if q != p
+            )
+            if not redundant:
+                reduced[v].add(p)
+    return reduced
+
+
+@dataclasses.dataclass(frozen=True)
+class Flow:
+    """A conceptual (SISO-logical) data flow with task metadata and a PC DAG.
+
+    ``cost``/``sel`` exclude nothing: source and sink tasks, if present, are
+    ordinary tasks whose constraints pin them first/last (paper §2: in a SISO
+    flow the source precedes every task and every task precedes the sink).
+    """
+
+    cost: np.ndarray  # (n,) float64, c_i > 0
+    sel: np.ndarray  # (n,) float64, sel_i > 0
+    edges: tuple[tuple[int, int], ...]  # raw PC pairs (j precedes k)
+    names: tuple[str, ...] | None = None
+
+    # derived, filled in __post_init__
+    pred_mask: tuple[int, ...] = dataclasses.field(default=(), compare=False)
+    succ_mask: tuple[int, ...] = dataclasses.field(default=(), compare=False)
+
+    def __post_init__(self):
+        cost = np.asarray(self.cost, dtype=np.float64)
+        sel = np.asarray(self.sel, dtype=np.float64)
+        if cost.ndim != 1 or sel.shape != cost.shape:
+            raise ValueError("cost/sel must be 1-D and same length")
+        if np.any(cost < 0):
+            raise ValueError("costs must be non-negative")
+        if np.any(sel <= 0):
+            raise ValueError("selectivities must be positive (paper: sel in (0, 2])")
+        object.__setattr__(self, "cost", cost)
+        object.__setattr__(self, "sel", sel)
+        n = cost.shape[0]
+        pred = transitive_closure_masks(n, self.edges)
+        succ = [0] * n
+        for v in range(n):
+            m = pred[v]
+            while m:
+                j = (m & -m).bit_length() - 1
+                succ[j] |= 1 << v
+                m &= m - 1
+        object.__setattr__(self, "pred_mask", tuple(pred))
+        object.__setattr__(self, "succ_mask", tuple(succ))
+
+    # ------------------------------------------------------------------ api
+    @property
+    def n(self) -> int:
+        return int(self.cost.shape[0])
+
+    def rank(self) -> np.ndarray:
+        """Paper's rank value (1 - sel_i) / c_i (§5.2)."""
+        with np.errstate(divide="ignore"):
+            r = (1.0 - self.sel) / self.cost
+        return np.where(self.cost == 0, np.inf * np.sign(1.0 - self.sel), r)
+
+    def preds(self, v: int) -> list[int]:
+        m = self.pred_mask[v]
+        out = []
+        while m:
+            j = (m & -m).bit_length() - 1
+            out.append(j)
+            m &= m - 1
+        return out
+
+    def succs(self, v: int) -> list[int]:
+        m = self.succ_mask[v]
+        out = []
+        while m:
+            j = (m & -m).bit_length() - 1
+            out.append(j)
+            m &= m - 1
+        return out
+
+    def direct_preds(self) -> list[set[int]]:
+        return transitive_reduction(self.n, self.pred_mask)
+
+    def must_precede(self, a: int, b: int) -> bool:
+        return bool((self.pred_mask[b] >> a) & 1)
+
+    def is_valid_order(self, order: Sequence[int]) -> bool:
+        """True iff ``order`` is a permutation respecting all constraints."""
+        n = self.n
+        if len(order) != n or sorted(order) != list(range(n)):
+            return False
+        placed = 0
+        for v in order:
+            if self.pred_mask[v] & ~placed:
+                return False
+            placed |= 1 << v
+        return True
+
+    def topological_order(self, rng: random.Random | None = None) -> list[int]:
+        """A valid order; random tie-breaking when ``rng`` is given (paper's
+        'random valid execution plan', trivially computable in linear time)."""
+        n = self.n
+        indeg = [bin(self.pred_mask[v]).count("1") for v in range(n)]
+        # use direct preds for correct in-degree accounting
+        direct = self.direct_preds()
+        indeg = [len(direct[v]) for v in range(n)]
+        succ: list[list[int]] = [[] for _ in range(n)]
+        for v in range(n):
+            for p in direct[v]:
+                succ[p].append(v)
+        ready = [v for v in range(n) if indeg[v] == 0]
+        out: list[int] = []
+        while ready:
+            if rng is None:
+                v = ready.pop()
+            else:
+                v = ready.pop(rng.randrange(len(ready)))
+            out.append(v)
+            for w in succ[v]:
+                indeg[w] -= 1
+                if indeg[w] == 0:
+                    ready.append(w)
+        if len(out) != n:
+            raise ValueError("cyclic constraints")
+        return out
+
+    def pc_fraction(self) -> float:
+        """Fraction of constrained pairs: |closure| / (n(n-1)/2) (paper §3)."""
+        total = sum(bin(m).count("1") for m in self.pred_mask)
+        return total / (self.n * (self.n - 1) / 2)
+
+    def relabel(self, order: Sequence[int]) -> tuple["Flow", list[int]]:
+        """Relabel tasks so that ``order`` becomes the identity permutation.
+
+        Returns (new_flow, old_of_new) with new index i == old task order[i].
+        Used by Varol–Rotem which assumes label-monotone constraints.
+        """
+        old_of_new = list(order)
+        new_of_old = [0] * self.n
+        for i, v in enumerate(old_of_new):
+            new_of_old[v] = i
+        edges = tuple((new_of_old[a], new_of_old[b]) for a, b in self.edges)
+        names = (
+            tuple(self.names[v] for v in old_of_new) if self.names else None
+        )
+        return (
+            Flow(self.cost[old_of_new], self.sel[old_of_new], edges, names),
+            old_of_new,
+        )
+
+
+@dataclasses.dataclass
+class ParallelPlan:
+    """An execution DAG G over a flow's tasks (paper §6).
+
+    ``parents[v]`` = set of tasks with an edge into v in G.  ``inp_i`` is the
+    product of selectivities of *all ancestors* in G.  A task with >= 2
+    parents incurs one merge of cost ``mc`` charged at its input volume.
+    """
+
+    flow: Flow
+    parents: list[set[int]]
+
+    def ancestors_masks(self) -> list[int]:
+        n = self.flow.n
+        indeg = [len(self.parents[v]) for v in range(n)]
+        succ: list[list[int]] = [[] for _ in range(n)]
+        for v in range(n):
+            for p in self.parents[v]:
+                succ[p].append(v)
+        order = [v for v in range(n) if indeg[v] == 0]
+        head = 0
+        while head < len(order):
+            u = order[head]
+            head += 1
+            for w in succ[u]:
+                indeg[w] -= 1
+                if indeg[w] == 0:
+                    order.append(w)
+        if len(order) != n:
+            raise ValueError("parallel plan contains a cycle")
+        anc = [0] * n
+        for v in order:
+            m = 0
+            for p in self.parents[v]:
+                m |= anc[p] | (1 << p)
+            anc[v] = m
+        return anc
+
+    def is_valid(self) -> bool:
+        try:
+            anc = self.ancestors_masks()
+        except ValueError:
+            return False
+        return all(
+            (anc[v] & self.flow.pred_mask[v]) == self.flow.pred_mask[v]
+            for v in range(self.flow.n)
+        )

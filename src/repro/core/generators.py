@@ -1,0 +1,133 @@
+"""Synthetic flow generation per the paper's experimental setup (§8) and the
+PDI/Kettle case-study flow (§3, Tables 1-2)."""
+from __future__ import annotations
+
+import random
+
+import numpy as np
+
+from .flow import Flow
+
+__all__ = ["random_flow", "case_study_flow", "butterfly_mimo_segments"]
+
+
+def random_flow(
+    n: int,
+    pc_fraction: float,
+    rng: random.Random | np.random.Generator | int | None = None,
+    cost_range: tuple[float, float] = (1.0, 100.0),
+    sel_range: tuple[float, float] = (1e-3, 2.0),
+    distribution: str = "uniform",
+    beta_params: tuple[float, float] = (0.5, 0.5),
+) -> Flow:
+    """Random flow with ~pc_fraction * n(n-1)/2 precedence pairs (closure).
+
+    Matches §8: n in [10, 100], cost in [1, 100], sel in (0, 2], PCs counted
+    against the fully-constrained n(n-1)/2.  Constraints are sampled as pairs
+    (i, j), i < j over a hidden task shuffle, then transitively closed; we
+    add pairs until the closure reaches the target fraction, mirroring the
+    paper's alpha parameterization.
+    """
+    if isinstance(rng, (int, type(None))):
+        rng = np.random.default_rng(rng)
+    elif isinstance(rng, random.Random):
+        rng = np.random.default_rng(rng.randrange(2**63))
+
+    lo, hi = cost_range
+    slo, shi = sel_range
+    if distribution == "uniform":
+        cost = rng.uniform(lo, hi, size=n)
+        sel = rng.uniform(slo, shi, size=n)
+    elif distribution == "beta":
+        a, b = beta_params
+        cost = lo + (hi - lo) * rng.beta(a, b, size=n)
+        sel = slo + (shi - slo) * rng.beta(a, b, size=n)
+    else:
+        raise ValueError(distribution)
+
+    target = int(round(pc_fraction * n * (n - 1) / 2))
+    # hidden topological labeling: constraints always point label-forward,
+    # guaranteeing acyclicity for any sampled pair set.
+    perm = rng.permutation(n)
+    closure = [0] * n  # label-space predecessor bitmasks
+    count = 0
+    pairs = [(i, j) for i in range(n) for j in range(i + 1, n)]
+    order_idx = rng.permutation(len(pairs))
+    edges: list[tuple[int, int]] = []
+    for idx in order_idx:
+        if count >= target:
+            break
+        i, j = pairs[idx]
+        if (closure[j] >> i) & 1:
+            continue  # already implied
+        edges.append((i, j))
+        add = closure[i] | (1 << i)
+        # propagate to j and every label-descendant of j
+        delta = (closure[j] | add) & ~closure[j]
+        closure[j] |= add
+        count += bin(delta).count("1")
+        jbit_add = add | (1 << j)
+        for w in range(j + 1, n):
+            if (closure[w] >> j) & 1:
+                delta = (closure[w] | jbit_add) & ~closure[w]
+                if delta:
+                    closure[w] |= jbit_add
+                    count += bin(delta).count("1")
+    edges_t = tuple((int(perm[a]), int(perm[b])) for a, b in edges)
+    return Flow(cost=cost, sel=sel, edges=edges_t)
+
+
+def case_study_flow() -> Flow:
+    """The PDI/Kettle analytic flow of §3 (Tables 1 and 2).
+
+    13 tasks; Tweets is the source (precedes everything), Report Output the
+    sink (follows everything).  The inner constraints are Table 2; the entry
+    "LookupProductID -> F" is read as -> Filter Products (the only 'F' task
+    it feeds in Figure 2).
+    """
+    names = (
+        "Tweets",                   # 0  (source)
+        "Sentiment Analysis",       # 1
+        "Lookup ProductID",         # 2
+        "Filter Products",          # 3
+        "Lookup Region",            # 4
+        "Extract Date",             # 5
+        "Filter Dates",             # 6
+        "Sort Region,Product,Date", # 7
+        "SentimentAvg",             # 8
+        "Lookup Total Sales",       # 9
+        "Lookup Campaign",          # 10
+        "Filter Region",            # 11
+        "Report Output",            # 12 (sink)
+    )
+    cost = np.array(
+        [1.7, 4.5, 5.0, 1.9, 6.5, 19.4, 2.0, 173.0, 10.3, 10.8, 11.6, 2.0, 1.0]
+    )
+    sel = np.array([1, 1, 1, 0.9, 1, 1, 0.2, 1, 0.1, 1, 1, 0.22, 1.0])
+    inner = [
+        (1, 8),   # Sentiment Analysis -> SentimentAvg
+        (2, 3),   # Lookup ProductID -> Filter Products ("F")
+        (2, 7), (2, 9), (2, 10),
+        (4, 7), (4, 9), (4, 10), (4, 11),
+        (5, 6), (5, 7), (5, 9), (5, 10),
+        (7, 8),   # Sort -> SentimentAvg
+    ]
+    edges = [(0, k) for k in range(1, 13)] + [(k, 12) for k in range(12)] + inner
+    return Flow(cost=cost, sel=sel, edges=tuple(edges), names=names)
+
+
+def butterfly_mimo_segments(
+    n_segments: int,
+    seg_size: int,
+    pc_fraction: float,
+    rng: np.random.Generator | int | None = None,
+    **kw,
+) -> list[Flow]:
+    """Linear segments of a butterfly MIMO flow (paper §8.1.3: 10 segments of
+    10 or 20 tasks each).  Each segment is an independent SISO flow."""
+    if isinstance(rng, (int, type(None))):
+        rng = np.random.default_rng(rng)
+    return [
+        random_flow(seg_size, pc_fraction, rng=rng, **kw)
+        for _ in range(n_segments)
+    ]

@@ -1,0 +1,136 @@
+"""Existing approximate optimizers (state of the art the paper compares to):
+Swap, GreedyI, GreedyII, Partition — paper §5.1 and Appendix C."""
+from __future__ import annotations
+
+import itertools
+import random
+
+import numpy as np
+
+from .cost import scm
+from .flow import Flow
+
+__all__ = ["swap", "greedy1", "greedy2", "partition", "random_plan"]
+
+
+def random_plan(flow: Flow, rng: random.Random | int | None = None) -> list[int]:
+    if not isinstance(rng, random.Random):
+        rng = random.Random(rng)
+    return flow.topological_order(rng)
+
+
+def swap(
+    flow: Flow,
+    initial: list[int] | None = None,
+    rng: random.Random | int | None = None,
+) -> tuple[list[int], float]:
+    """Adjacent-swap hill climbing from a random valid plan (paper §5.1.1;
+    equivalent to the re-ordering subset of Simitsis et al. [10])."""
+    order = list(initial) if initial is not None else random_plan(flow, rng)
+    n = flow.n
+    cost, sel, pred = flow.cost, flow.sel, flow.pred_mask
+    changed = True
+    while changed:
+        changed = False
+        prod = 1.0
+        for k in range(n - 1):
+            x, y = order[k], order[k + 1]
+            if not ((pred[y] >> x) & 1):  # constraint allows the swap
+                delta = cost[y] + sel[y] * cost[x] - cost[x] - sel[x] * cost[y]
+                if delta < -1e-12:
+                    order[k], order[k + 1] = y, x
+                    changed = True
+                    x = order[k]
+            prod *= sel[x]
+    return order, scm(flow, order)
+
+
+def greedy1(flow: Flow) -> tuple[list[int], float]:
+    """GreedyI (paper §5.1.2): repeatedly append the eligible task with the
+    maximum rank (1 - sel)/c."""
+    n = flow.n
+    rank = flow.rank()
+    placed = 0
+    order: list[int] = []
+    for _ in range(n):
+        best_v, best_r = -1, -np.inf
+        for v in range(n):
+            if (placed >> v) & 1:
+                continue
+            if flow.pred_mask[v] & ~placed:
+                continue
+            if rank[v] > best_r:
+                best_r, best_v = rank[v], v
+        order.append(best_v)
+        placed |= 1 << best_v
+    return order, scm(flow, order)
+
+
+def greedy2(flow: Flow) -> tuple[list[int], float]:
+    """GreedyII (paper §5.1.2, after [21]): right-to-left construction — from
+    the sink toward the source, repeatedly *prepend* the task all of whose
+    successors are already placed, choosing the one with minimum rank (the
+    task you least want early is placed late)."""
+    n = flow.n
+    rank = flow.rank()
+    placed = 0
+    rev: list[int] = []
+    for _ in range(n):
+        best_v, best_r = -1, np.inf
+        for v in range(n):
+            if (placed >> v) & 1:
+                continue
+            if flow.succ_mask[v] & ~placed:
+                continue
+            if rank[v] < best_r:
+                best_r, best_v = rank[v], v
+        rev.append(best_v)
+        placed |= 1 << best_v
+    order = rev[::-1]
+    return order, scm(flow, order)
+
+
+_PARTITION_BRUTE_LIMIT = 9
+
+
+def partition(flow: Flow) -> tuple[list[int], float]:
+    """Partition (paper §5.1.3, after Yerneni et al. [11]).
+
+    Tasks are clustered by eligibility level: cluster k holds tasks whose
+    prerequisites all lie in clusters < k.  Each cluster (mutually
+    unconstrained by construction) is then ordered exhaustively to minimize
+    its SCM contribution given the running selectivity prefix.  Clusters
+    larger than 9 fall back to rank ordering (the paper notes k! is
+    inapplicable beyond a dozen tasks; rank order is optimal for
+    unconstrained sets by the classic filter-ordering result).
+    """
+    n = flow.n
+    cost, sel = flow.cost, flow.sel
+    placed = 0
+    clusters: list[list[int]] = []
+    remaining = set(range(n))
+    while remaining:
+        level = [v for v in sorted(remaining) if not (flow.pred_mask[v] & ~placed)]
+        if not level:
+            raise ValueError("cyclic constraints")
+        clusters.append(level)
+        for v in level:
+            placed |= 1 << v
+            remaining.remove(v)
+    order: list[int] = []
+    for level in clusters:
+        if len(level) <= _PARTITION_BRUTE_LIMIT:
+            best_perm, best_w = None, np.inf
+            for perm in itertools.permutations(level):
+                w = 0.0
+                p = 1.0
+                for v in perm:
+                    w += p * cost[v]
+                    p *= sel[v]
+                if w < best_w:
+                    best_w, best_perm = w, perm
+            order.extend(best_perm)
+        else:
+            rank = flow.rank()
+            order.extend(sorted(level, key=lambda v: -rank[v]))
+    return order, scm(flow, order)

@@ -1,0 +1,262 @@
+"""MIMO flows — paper §7, Algorithm 4.
+
+A MIMO flow is a DAG of *segments* (SISO sub-flows) joined by n-ary merge
+points (AND-joins).  Optimization = (a) re-order each segment with any SISO
+algorithm, (b) apply factorize/distribute moves across joins, repeat to a
+fixpoint.
+
+Cost model: every source segment is fed one logical tuple; a merge point's
+output volume is the *sum* of its input volumes (union semantics, the
+AND-join of [24]); a segment of tasks multiplies volume by its selectivity
+product and contributes ``volume_in * SCM_per_tuple(segment order)``.
+Distribute pushes a sel<=1 head task of a post-join segment into all join
+inputs (then per-input reordering can move it further upstream); factorize
+pulls identical tail tasks of all join inputs after the join.  Both preserve
+results under the paper's assembly-line semantics; we apply them only when
+the estimated cost strictly decreases.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Sequence
+
+import numpy as np
+
+from .cost import scm
+from .flow import Flow
+
+__all__ = ["Segment", "MIMOFlow", "optimize_mimo", "butterfly"]
+
+
+@dataclasses.dataclass
+class Segment:
+    """A SISO segment: task metadata plus the current execution order."""
+
+    cost: np.ndarray
+    sel: np.ndarray
+    edges: tuple[tuple[int, int], ...]
+    tags: list[int]  # task identity tags (for factorize matching)
+    order: list[int] | None = None
+
+    def flow(self) -> Flow:
+        return Flow(self.cost, self.sel, self.edges)
+
+    def selprod(self) -> float:
+        return float(np.prod(self.sel))
+
+    def per_tuple_scm(self) -> float:
+        order = self.order if self.order is not None else list(range(len(self.cost)))
+        return scm(self.flow(), order)
+
+
+@dataclasses.dataclass
+class MIMOFlow:
+    """Segments + segment-level DAG edges (src_segment -> dst_segment)."""
+
+    segments: list[Segment]
+    seg_edges: list[tuple[int, int]]
+
+    def seg_parents(self) -> list[list[int]]:
+        par: list[list[int]] = [[] for _ in self.segments]
+        for a, b in self.seg_edges:
+            par[b].append(a)
+        return par
+
+    def volumes(self) -> list[float]:
+        """Input volume of each segment (sources get 1.0)."""
+        par = self.seg_parents()
+        n = len(self.segments)
+        indeg = [len(par[i]) for i in range(n)]
+        succ: list[list[int]] = [[] for _ in range(n)]
+        for a, b in self.seg_edges:
+            succ[a].append(b)
+        vol = [0.0] * n
+        order = [i for i in range(n) if indeg[i] == 0]
+        for i in order:
+            vol[i] = 1.0
+        head = 0
+        work = list(indeg)
+        while head < len(order):
+            u = order[head]
+            head += 1
+            out_u = vol[u] * self.segments[u].selprod()
+            for w in succ[u]:
+                vol[w] += out_u
+                work[w] -= 1
+                if work[w] == 0:
+                    order.append(w)
+        return vol
+
+    def total_cost(self) -> float:
+        vol = self.volumes()
+        return float(
+            sum(v * s.per_tuple_scm() for v, s in zip(vol, self.segments))
+        )
+
+
+def _reorder_segments(
+    mimo: MIMOFlow, optimizer: Callable[[Flow], tuple[list[int], float]]
+) -> bool:
+    changed = False
+    for seg in mimo.segments:
+        order, _ = optimizer(seg.flow())
+        if order != seg.order:
+            seg.order = order
+            changed = True
+    return changed
+
+
+def _head_task(seg: Segment) -> int | None:
+    """Index (within segment) of the first task of the current order, if it
+    has no within-segment prerequisites binding it to the head."""
+    order = seg.order if seg.order is not None else list(range(len(seg.cost)))
+    return order[0] if order else None
+
+
+def _pop_task(seg: Segment, idx: int) -> tuple[float, float, int]:
+    """Remove task ``idx`` from the segment; return (cost, sel, tag)."""
+    keep = [i for i in range(len(seg.cost)) if i != idx]
+    remap = {old: new for new, old in enumerate(keep)}
+    c, s, tag = float(seg.cost[idx]), float(seg.sel[idx]), seg.tags[idx]
+    seg.cost = seg.cost[keep]
+    seg.sel = seg.sel[keep]
+    seg.tags = [seg.tags[i] for i in keep]
+    seg.edges = tuple(
+        (remap[a], remap[b]) for a, b in seg.edges if a != idx and b != idx
+    )
+    if seg.order is not None:
+        seg.order = [remap[v] for v in seg.order if v != idx]
+    return c, s, tag
+
+
+def _push_front(seg: Segment, c: float, s: float, tag: int) -> None:
+    """Insert a task at the head of the segment (precedes everything)."""
+    n = len(seg.cost)
+    seg.cost = np.concatenate([seg.cost, [c]])
+    seg.sel = np.concatenate([seg.sel, [s]])
+    seg.tags = seg.tags + [tag]
+    seg.edges = seg.edges + tuple((n, i) for i in range(n))
+    seg.order = [n] + (seg.order if seg.order is not None else list(range(n)))
+
+
+def _append_back(seg: Segment, c: float, s: float, tag: int) -> None:
+    """Insert a task at the tail of the segment (follows everything)."""
+    n = len(seg.cost)
+    seg.cost = np.concatenate([seg.cost, [c]])
+    seg.sel = np.concatenate([seg.sel, [s]])
+    seg.tags = seg.tags + [tag]
+    seg.edges = seg.edges + tuple((i, n) for i in range(n))
+    seg.order = (seg.order if seg.order is not None else list(range(n))) + [n]
+
+
+def _try_distribute(mimo: MIMOFlow) -> bool:
+    """Move a join-segment head task with sel<=1 into every join input, if
+    that reduces the estimated total cost."""
+    par = mimo.seg_parents()
+    for si, seg in enumerate(mimo.segments):
+        if len(par[si]) < 2 or len(seg.cost) == 0:
+            continue
+        h = _head_task(seg)
+        if h is None or seg.sel[h] > 1.0:
+            continue
+        # only distribute a task that may start the segment (no within-seg preds)
+        if any(b == h for _, b in seg.edges):
+            continue
+        before = mimo.total_cost()
+        import copy
+
+        trial = copy.deepcopy(mimo)
+        tseg = trial.segments[si]
+        c, s, tag = _pop_task(tseg, h)
+        for pi in par[si]:
+            _append_back(trial.segments[pi], c, s, tag)
+        if trial.total_cost() < before - 1e-12:
+            mimo.segments[:] = trial.segments
+            mimo.seg_edges[:] = trial.seg_edges
+            return True
+    return False
+
+
+def _try_factorize(mimo: MIMOFlow) -> bool:
+    """If all inputs of a join end with the *same* task (by tag), pull one
+    copy after the join, if that reduces the estimated total cost."""
+    par = mimo.seg_parents()
+    for si in range(len(mimo.segments)):
+        ps = par[si]
+        if len(ps) < 2:
+            continue
+        tails = []
+        for pi in ps:
+            seg = mimo.segments[pi]
+            order = seg.order if seg.order is not None else list(range(len(seg.cost)))
+            if not order:
+                break
+            t = order[-1]
+            if any(a == t for a, _ in seg.edges):  # t must come last? it does;
+                pass
+            tails.append((pi, t, seg.tags[t], float(seg.cost[t]), float(seg.sel[t])))
+        else:
+            if len({t[2] for t in tails}) == 1 and len(tails) == len(ps):
+                before = mimo.total_cost()
+                import copy
+
+                trial = copy.deepcopy(mimo)
+                c, s, tag = 0.0, 1.0, tails[0][2]
+                for pi, t, *_ in tails:
+                    c, s, tag = _pop_task(trial.segments[pi], t)
+                _push_front(trial.segments[si], c, s, tag)
+                if trial.total_cost() < before - 1e-12:
+                    mimo.segments[:] = trial.segments
+                    mimo.seg_edges[:] = trial.seg_edges
+                    return True
+    return False
+
+
+def optimize_mimo(
+    mimo: MIMOFlow,
+    optimizer: Callable[[Flow], tuple[list[int], float]],
+    max_rounds: int = 10,
+) -> float:
+    """Algorithm 4: alternate segment re-ordering and factorize/distribute
+    moves until convergence.  Returns the final estimated total cost."""
+    for _ in range(max_rounds):
+        changed = _reorder_segments(mimo, optimizer)
+        changed |= _try_factorize(mimo)
+        changed |= _try_distribute(mimo)
+        if not changed:
+            break
+    return mimo.total_cost()
+
+
+def butterfly(
+    segments: Sequence[Flow], rng: np.random.Generator | int | None = None
+) -> MIMOFlow:
+    """Assemble SISO flows into a butterfly MIMO (paper Fig. 9 left):
+    sources pair-merge into inner segments which pair-merge again, ending in
+    a single sink segment — the classic reduction tree."""
+    segs = [
+        Segment(f.cost.copy(), f.sel.copy(), f.edges, list(range(f.n)), None)
+        for f in segments
+    ]
+    for i, s in enumerate(segs):
+        s.tags = [i * 1000 + t for t in s.tags]
+    edges: list[tuple[int, int]] = []
+    level = list(range(len(segs)))
+    next_tag = 10**6
+    while len(level) > 1:
+        nxt: list[int] = []
+        for i in range(0, len(level) - 1, 2):
+            # a tiny merge segment joining level[i], level[i+1]
+            segs.append(
+                Segment(
+                    np.array([1.0]), np.array([1.0]), (), [next_tag], [0]
+                )
+            )
+            next_tag += 1
+            j = len(segs) - 1
+            edges += [(level[i], j), (level[i + 1], j)]
+            nxt.append(j)
+        if len(level) % 2:
+            nxt.append(level[-1])
+        level = nxt
+    return MIMOFlow(segs, edges)

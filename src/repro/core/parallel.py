@@ -1,0 +1,166 @@
+"""Parallel execution plans — paper §6.
+
+* ``parallelize`` — Algorithm 3: post-process a *linear* plan so that runs of
+  consecutive tasks with selectivity > 1 fan out from the run's predecessor
+  instead of chaining (Case III of the paper's analysis), then merge the
+  dangling outputs into the first subsequent task.  Constraints inside a run
+  are honoured by feeding a constrained task from its prerequisites in the
+  run instead of from the anchor.
+* ``pgreedy1`` / ``pgreedy2`` — §6.1 (after Srivastava et al. [16]):
+  construct a parallel plan task-by-task, choosing for each appended task the
+  input "cut" (set of immediate predecessors) that minimizes its input
+  volume.  [16] solves the cut with an LP; we use the equivalent greedy for
+  independent selectivities: start from the PC-required ancestors and add any
+  placed task whose marginal selectivity contribution is < 1.  PGreedyI
+  appends the candidate with minimum marginal cost ``inp_j * c_j``;
+  PGreedyII appends the one with maximum rank ``(1 - sel_j)/(inp_j * c_j)``.
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import numpy as np
+
+from .cost import scm_parallel
+from .flow import Flow, ParallelPlan
+
+__all__ = ["parallelize", "pgreedy1", "pgreedy2"]
+
+
+def parallelize(flow: Flow, order: Sequence[int]) -> ParallelPlan:
+    """Algorithm 3: fan out maximal runs of sel>1 tasks in a linear plan."""
+    n = flow.n
+    order = list(order)
+    sel = flow.sel
+    parents: list[set[int]] = [set() for _ in range(n)]
+    for a, b in zip(order, order[1:]):
+        parents[b] = {a}
+
+    i = 0
+    while i < n:
+        if sel[order[i]] <= 1.0:
+            i += 1
+            continue
+        # maximal run of sel>1 tasks starting at i
+        j = i + 1
+        while j < n and sel[order[j]] > 1.0:
+            j += 1
+        run = order[i:j]
+        anchor = {order[i - 1]} if i > 0 else set()
+        run_set = set(run)
+        for v in run:
+            req = {p for p in flow.preds(v) if p in run_set}
+            parents[v] = req if req else set(anchor)
+        if j < n:
+            nxt = order[j]
+            tails = [v for v in run if not any(v in parents[w] for w in run)]
+            parents[nxt] = set(tails) if tails else set(anchor)
+        i = j
+    plan = ParallelPlan(flow, parents)
+    assert plan.is_valid()
+    return plan
+
+
+# ------------------------------------------------------------------ PGreedy
+def _best_cut(
+    flow: Flow,
+    v: int,
+    placed: list[int],
+    anc_mask: list[int],
+) -> tuple[set[int], float, int]:
+    """Cheapest set of immediate predecessors for ``v`` among ``placed``.
+
+    Returns (cut, input_volume, ancestor_mask).  The required ancestors are
+    PC predecessors of ``v``; beyond those, any placed task whose *marginal*
+    ancestor set (itself plus its ancestors, minus what we already have) has
+    selectivity product < 1 reduces the input volume and is added greedily
+    (optimal under independent selectivities: marginal products commute and
+    each inclusion decision is independent once taken in any order).
+    """
+    sel = flow.sel
+    req = flow.pred_mask[v]
+    cut: set[int] = set()
+    anc = 0
+    # seed with required predecessors (use maximal ones: those not implied)
+    for p in placed:
+        if (req >> p) & 1 and not any(
+            (flow.pred_mask[q] >> p) & 1 for q in placed if (req >> q) & 1 and q != p
+        ):
+            cut.add(p)
+            anc |= anc_mask[p] | (1 << p)
+    assert (anc & req) == req, "candidate appended before its prerequisites"
+    # greedily add volume-reducing placed tasks
+    for p in placed:
+        if (anc >> p) & 1:
+            continue
+        gain_mask = (anc_mask[p] | (1 << p)) & ~anc
+        prod = 1.0
+        m = gain_mask
+        while m:
+            b = (m & -m).bit_length() - 1
+            prod *= sel[b]
+            m &= m - 1
+        if prod < 1.0:
+            cut.add(p)
+            anc |= anc_mask[p] | (1 << p)
+    # drop cut members now implied by others (keep immediate preds minimal)
+    minimal = {
+        p
+        for p in cut
+        if not any((anc_mask[q] >> p) & 1 for q in cut if q != p)
+    }
+    vol = 1.0
+    m = anc
+    while m:
+        b = (m & -m).bit_length() - 1
+        vol *= sel[b]
+        m &= m - 1
+    return minimal, vol, anc
+
+
+def _pgreedy(flow: Flow, flavour: int, mc: float) -> ParallelPlan:
+    n = flow.n
+    cost = flow.cost
+    sel = flow.sel
+    parents: list[set[int]] = [set() for _ in range(n)]
+    anc_mask = [0] * n
+    placed: list[int] = []
+    placed_mask = 0
+    while len(placed) < n:
+        best_v = -1
+        best_key = np.inf
+        best_cut: set[int] = set()
+        best_anc = 0
+        for v in range(n):
+            if (placed_mask >> v) & 1:
+                continue
+            if flow.pred_mask[v] & ~placed_mask:
+                continue
+            cut, vol, anc = _best_cut(flow, v, placed, anc_mask)
+            marginal = vol * cost[v] + (mc * vol if len(cut) >= 2 else 0.0)
+            if flavour == 1:
+                key = marginal
+            else:  # rank flavour: maximize (1-sel)/marginal == minimize -
+                key = -(1.0 - sel[v]) / marginal if marginal > 0 else -np.inf
+            if key < best_key:
+                best_key = key
+                best_v, best_cut, best_anc = v, cut, anc
+        parents[best_v] = best_cut
+        anc_mask[best_v] = best_anc
+        placed.append(best_v)
+        placed_mask |= 1 << best_v
+    plan = ParallelPlan(flow, parents)
+    assert plan.is_valid()
+    return plan
+
+
+def pgreedy1(flow: Flow, mc: float = 0.0) -> tuple[ParallelPlan, float]:
+    """PGreedyI: append the eligible task with minimum marginal cost."""
+    plan = _pgreedy(flow, flavour=1, mc=mc)
+    return plan, scm_parallel(plan, mc=mc)
+
+
+def pgreedy2(flow: Flow, mc: float = 0.0) -> tuple[ParallelPlan, float]:
+    """PGreedyII: append the eligible task with maximum rank value."""
+    plan = _pgreedy(flow, flavour=2, mc=mc)
+    return plan, scm_parallel(plan, mc=mc)

@@ -1,0 +1,364 @@
+"""Rank-ordering optimizers — paper §5.2: KBZ, RO-I, RO-II, RO-III.
+
+The rank of a task is ``(1 - sel) / cost`` (paper §5.2); for two adjacent
+unconstrained tasks, the one with the higher rank should run first (the
+classic Krishnamurthy-Boral-Zaniolo / Ibaraki-Kameda result, which holds
+because SCM is an ASI — adjacent-sequence-interchange — cost function).
+
+``Module`` compounds are sequences of tasks treated as one unit with
+``cost(AB) = C_A + S_A * C_B`` and ``sel(AB) = S_A * S_B``; the rank of a
+compound lies strictly between the ranks of its parts, which is what makes
+the KBZ normalization loop terminate with a rank-sorted chain.
+
+* ``kbz``    — exact for tree-shaped (forest) precedence graphs.
+* ``ro1``    — §5.2.2: tree-ify the PC by keeping only the max-rank direct
+  parent, run KBZ, then repair validity by pulling prerequisites upstream.
+* ``ro2``    — §5.2.3: merge branches that share a source and sink into a
+  single rank-ordered path (constraint augmentation: always valid, possibly
+  over-restricted), then KBZ on the resulting forest.
+* ``ro3``    — §5.2.4 / Algorithm 2: RO-II followed by a block-transposition
+  hill-climb over subplan sizes 1..k with O(1) move deltas, to fixpoint.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from .cost import PrefixState, scm
+from .flow import Flow, transitive_reduction
+
+__all__ = ["kbz", "ro1", "ro2", "ro3", "Module"]
+
+
+@dataclasses.dataclass
+class Module:
+    """A compound sequence of tasks with aggregate cost/selectivity."""
+
+    tasks: list[int]
+    C: float
+    S: float
+
+    @property
+    def rank(self) -> float:
+        if self.C <= 0.0:
+            if self.S == 1.0:
+                return 0.0
+            return np.inf if self.S < 1.0 else -np.inf
+        return (1.0 - self.S) / self.C
+
+    def followed_by(self, other: "Module") -> "Module":
+        return Module(
+            self.tasks + other.tasks,
+            self.C + self.S * other.C,
+            self.S * other.S,
+        )
+
+
+def _merge_chains(chains: list[list[Module]]) -> list[Module]:
+    """Merge rank-descending module chains into one rank-descending chain.
+
+    Valid whenever modules of different chains are mutually unconstrained
+    (k-way merge-sort by rank; ties broken arbitrarily but deterministically).
+    """
+    out: list[Module] = []
+    heads = [0] * len(chains)
+    while True:
+        best_i = -1
+        best_r = -np.inf
+        for i, ch in enumerate(chains):
+            if heads[i] < len(ch):
+                r = ch[heads[i]].rank
+                if r > best_r:
+                    best_r, best_i = r, i
+        if best_i < 0:
+            return out
+        out.append(chains[best_i][heads[best_i]])
+        heads[best_i] += 1
+
+
+def _normalize(seq: list[Module]) -> list[Module]:
+    """Compound adjacent modules until the chain is rank-descending.
+
+    Precondition: any rank inversion is a *constraint* (earlier module must
+    precede the later one), so compounding is the only legal fix.
+    """
+    out: list[Module] = []
+    for m in seq:
+        out.append(m)
+        while len(out) > 1 and out[-2].rank < out[-1].rank:
+            b = out.pop()
+            out[-1] = out[-1].followed_by(b)
+    return out
+
+
+def _kbz_forest(flow: Flow, parent: list[int]) -> list[int]:
+    """KBZ over an in-forest ``parent`` (parent[v] == -1 for roots).
+
+    Bottom-up chainification: each subtree becomes a rank-descending chain of
+    modules whose first module contains the subtree root; sibling chains are
+    merged by rank; the root is prepended and normalized in.
+    """
+    n = flow.n
+    children: list[list[int]] = [[] for _ in range(n)]
+    roots: list[int] = []
+    for v in range(n):
+        if parent[v] < 0:
+            roots.append(v)
+        else:
+            children[parent[v]].append(v)
+
+    cost, sel = flow.cost, flow.sel
+    memo: dict[int, list[Module]] = {}
+
+    def chainify(r: int) -> list[Module]:
+        # iterative postorder (flows can be deep chains; avoid recursion)
+        order: list[int] = []
+        stack = [r]
+        while stack:
+            u = stack.pop()
+            order.append(u)
+            stack.extend(children[u])
+        for u in reversed(order):
+            merged = _merge_chains([memo.pop(c) for c in children[u]])
+            seq = [Module([u], float(cost[u]), float(sel[u]))] + merged
+            memo[u] = _normalize(seq)
+        return memo.pop(r)
+
+    top = _merge_chains([chainify(r) for r in roots])
+    out: list[int] = []
+    for m in top:
+        out.extend(m.tasks)
+    return out
+
+
+def kbz(flow: Flow) -> tuple[list[int], float]:
+    """KBZ on a flow whose PC transitive reduction is already a forest.
+
+    Raises ``ValueError`` otherwise (use RO-I/RO-II/RO-III for general DAGs).
+    Exact for forests by the ASI argument of Ibaraki-Kameda/KBZ.
+    """
+    direct = flow.direct_preds()
+    parent = [-1] * flow.n
+    for v in range(flow.n):
+        if len(direct[v]) > 1:
+            raise ValueError(
+                f"task {v} has {len(direct[v])} direct predecessors; "
+                "KBZ requires a tree-shaped precedence graph"
+            )
+        if direct[v]:
+            parent[v] = next(iter(direct[v]))
+    order = _kbz_forest(flow, parent)
+    return order, scm(flow, order)
+
+
+# --------------------------------------------------------------------- RO-I
+def ro1(flow: Flow) -> tuple[list[int], float]:
+    """RO-I (§5.2.2): drop all but the max-rank direct parent, KBZ, repair."""
+    n = flow.n
+    rank = flow.rank()
+    direct = flow.direct_preds()
+    parent = [-1] * n
+    for v in range(n):
+        if direct[v]:
+            parent[v] = max(direct[v], key=lambda p: (rank[p], -p))
+    order = _kbz_forest(flow, parent)
+    # Post-processing: the KBZ result may violate dropped constraints.  Walk
+    # the tentative order; before emitting a task, emit its not-yet-placed
+    # prerequisites (in a constraint-respecting relative order, tie-broken by
+    # their tentative position) — i.e. "move tasks upstream if needed as
+    # prerequisites for other tasks placed earlier".
+    pos = [0] * n
+    for i, v in enumerate(order):
+        pos[v] = i
+    placed = 0
+    out: list[int] = []
+
+    def emit_with_preds(v: int) -> None:
+        nonlocal placed
+        missing = [p for p in flow.preds(v) if not ((placed >> p) & 1)]
+        missing.sort(key=lambda p: pos[p])
+        # the closure list sorted by position is emitted respecting pairwise
+        # constraints: repeatedly take the minimum-position eligible one.
+        pending = missing
+        while pending:
+            nxt = None
+            for p in pending:
+                if not (flow.pred_mask[p] & ~placed):
+                    nxt = p
+                    break
+            assert nxt is not None, "constraint cycle during RO-I repair"
+            out.append(nxt)
+            placed |= 1 << nxt
+            pending.remove(nxt)
+        out.append(v)
+        placed |= 1 << v
+
+    for v in order:
+        if not ((placed >> v) & 1):
+            emit_with_preds(v)
+    return out, scm(flow, out)
+
+
+# -------------------------------------------------------------------- RO-II
+def _upchain(
+    p: int, direct: list[set[int]], nsucc: list[int]
+) -> list[int]:
+    """Maximal simple chain ending at ``p``: walk up through nodes with one
+    direct parent whose parent has a single direct successor."""
+    chain = [p]
+    u = p
+    while len(direct[u]) == 1:
+        (q,) = direct[u]
+        if nsucc[q] != 1:
+            break
+        chain.append(q)
+        u = q
+    chain.reverse()
+    return chain
+
+
+def _augmented_forest(flow: Flow) -> list[int]:
+    """RO-II pre-processing: restrict the PC DAG to an in-forest.
+
+    Nodes are processed most-upstream-first (topological order, matching the
+    paper's merge order; nested join points are resolved before outer ones
+    because their sinks appear earlier or have already been linearized).
+    For a node with multiple direct parents, the parents' upstream simple
+    chains are normalized into rank-descending module chains and interleaved
+    by rank (paper Fig. 6).  Where a branch is not a simple chain, we fall
+    back to ordering the parents themselves by rank — both moves only *add*
+    constraints, so any ordering of the result is valid for the original PC.
+
+    Returns ``parent`` suitable for ``_kbz_forest``.
+    """
+    n = flow.n
+    cost, sel = flow.cost, flow.sel
+    # mutable closure copy as bitmasks
+    pred = list(flow.pred_mask)
+
+    def add_edge(a: int, b: int) -> None:
+        """Add constraint a -> b and re-close (descendants of b gain a's
+        ancestors)."""
+        gain = pred[a] | (1 << a)
+        stack = [b]
+        seen = 0
+        while stack:
+            u = stack.pop()
+            if (seen >> u) & 1:
+                continue
+            seen |= 1 << u
+            if (pred[u] | gain) != pred[u]:
+                pred[u] |= gain
+                for w in range(n):
+                    if (pred[w] >> u) & 1:
+                        stack.append(w)
+        # a's new descendants: none besides b's subtree (handled above)
+
+    changed = True
+    while changed:
+        changed = False
+        direct = transitive_reduction(n, pred)
+        nsucc = [0] * n
+        for v in range(n):
+            for p in direct[v]:
+                nsucc[p] += 1
+        # topological order by closure popcount = most upstream first
+        topo = sorted(range(n), key=lambda v: bin(pred[v]).count("1"))
+        for v in topo:
+            if len(direct[v]) < 2:
+                continue
+            parents = sorted(direct[v])
+            chains = [_upchain(p, direct, nsucc) for p in parents]
+            simple = all(
+                len(direct[c[0]]) <= 1 for c in chains
+            )  # each chain's head has at most the shared source above it
+            if simple and all(len(c) >= 1 for c in chains):
+                mod_chains = [
+                    _normalize(
+                        [Module([t], float(cost[t]), float(sel[t])) for t in c]
+                    )
+                    for c in chains
+                ]
+                merged = _merge_chains(mod_chains)
+                seq: list[int] = []
+                for m in merged:
+                    seq.extend(m.tasks)
+                for a, b in zip(seq, seq[1:]):
+                    if not ((pred[b] >> a) & 1):
+                        add_edge(a, b)
+            else:
+                rank = flow.rank()
+                ps = sorted(parents, key=lambda p: (-rank[p], p))
+                for a, b in zip(ps, ps[1:]):
+                    if not ((pred[b] >> a) & 1):
+                        add_edge(a, b)
+            changed = True
+            break  # recompute reduction after each merge
+    direct = transitive_reduction(n, pred)
+    parent = [-1] * n
+    for v in range(n):
+        assert len(direct[v]) <= 1
+        if direct[v]:
+            parent[v] = next(iter(direct[v]))
+    return parent
+
+
+def ro2(flow: Flow) -> tuple[list[int], float]:
+    """RO-II (§5.2.3): branch-merge pre-processing + KBZ; always valid."""
+    parent = _augmented_forest(flow)
+    order = _kbz_forest(flow, parent)
+    assert flow.is_valid_order(order)
+    return order, scm(flow, order)
+
+
+# ------------------------------------------------------------------- RO-III
+def block_move_pass(
+    flow: Flow, order: list[int], k: int = 5, max_rounds: int = 50
+) -> tuple[list[int], float]:
+    """Algorithm 2's post-processing: try moving every subplan of size 1..k
+    after every later position; apply strictly improving, valid moves; repeat
+    until a fixpoint (paper: converges in ~3 rounds in practice)."""
+    n = flow.n
+    st = PrefixState(flow, order)
+    succ = flow.succ_mask
+    for _ in range(max_rounds):
+        improved = False
+        for size in range(1, k + 1):
+            s = 0
+            while s + size <= n:
+                e = s + size
+                block = st.order[s:e]
+                block_succ = 0
+                for b in block:
+                    block_succ |= succ[b]
+                t = e
+                mid_mask = 0
+                best_t = -1
+                best_delta = -1e-12
+                while t < n:
+                    nxt = st.order[t]
+                    mid_mask |= 1 << nxt
+                    if block_succ & mid_mask:
+                        break  # a block member must precede a mid task
+                    t += 1
+                    d = st.block_move_delta(s, e, t)
+                    if d < best_delta:
+                        best_delta = d
+                        best_t = t
+                if best_t > 0:
+                    st.apply_block_move(s, e, best_t)
+                    improved = True
+                else:
+                    s += 1
+        if not improved:
+            break
+    return st.order, st.total
+
+
+def ro3(flow: Flow, k: int = 5) -> tuple[list[int], float]:
+    """RO-III (§5.2.4): RO-II then the block-transposition post-pass."""
+    order, _ = ro2(flow)
+    order, cost = block_move_pass(flow, order, k=k)
+    assert flow.is_valid_order(order)
+    return order, cost

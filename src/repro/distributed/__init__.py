@@ -1,0 +1,19 @@
+from .sharding import (
+    activation_rules,
+    batch_pspec,
+    cache_pspecs,
+    make_train_sharder,
+    opt_state_pspecs,
+    param_pspecs,
+)
+from .checkpoint import CheckpointManager
+
+__all__ = [
+    "activation_rules",
+    "batch_pspec",
+    "cache_pspecs",
+    "make_train_sharder",
+    "opt_state_pspecs",
+    "param_pspecs",
+    "CheckpointManager",
+]

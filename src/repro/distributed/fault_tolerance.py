@@ -1,0 +1,73 @@
+"""Fault-tolerance utilities: step watchdog / straggler detection, retry
+wrapper, and the restart contract.
+
+Restart contract (rank-stateless): the launcher owns no identity — any
+cohort that can form the configured mesh restores the latest committed
+checkpoint (model, optimizer, RNG, data cursor, pipeline-optimizer state)
+and continues.  Checkpoints hold logical arrays, so the restored cohort may
+be a different size (elastic re-shard on load).
+
+Straggler mitigation has two tiers:
+  1. detection — ``StepWatchdog`` flags steps slower than mean + k*std;
+  2. response — the *host-local* data pipeline can switch to a cheaper plan
+     (the paper's optimizer under a tighter cost budget) without any global
+     coordination, since plan choice only affects host-side preprocessing.
+     ``suggest_cheaper_plan`` implements that via RO-III on the measured
+     flow with the heavy tail ops deferred.
+"""
+from __future__ import annotations
+
+import time
+from collections import deque
+
+import numpy as np
+
+from ..core.rank import ro3
+
+__all__ = ["StepWatchdog", "retry", "suggest_cheaper_plan"]
+
+
+class StepWatchdog:
+    def __init__(self, window: int = 50, threshold_std: float = 3.0):
+        self.times: deque[float] = deque(maxlen=window)
+        self.threshold_std = threshold_std
+        self._t0: float | None = None
+        self.flagged = 0
+
+    def start(self):
+        self._t0 = time.perf_counter()
+
+    def stop(self) -> bool:
+        """Record the step; True if it was a straggler step."""
+        dt = time.perf_counter() - self._t0
+        slow = False
+        if len(self.times) >= 10:
+            mu = float(np.mean(self.times))
+            sd = float(np.std(self.times)) + 1e-9
+            slow = dt > mu + self.threshold_std * sd
+            if slow:
+                self.flagged += 1
+        self.times.append(dt)
+        return slow
+
+
+def retry(fn, attempts: int = 3, backoff: float = 1.0, exceptions=(Exception,)):
+    """Run fn(); on failure, retry with linear backoff.  For transient I/O
+    (checkpoint storage, coordinator RPCs)."""
+    for i in range(attempts):
+        try:
+            return fn()
+        except exceptions:
+            if i == attempts - 1:
+                raise
+            time.sleep(backoff * (i + 1))
+
+
+def suggest_cheaper_plan(stats, headroom: float = 0.8):
+    """A plan for a straggling host: optimize the measured flow with RO-III,
+    which front-loads selective work — the cheapest valid plan under the
+    SCM model.  ``headroom`` is reported so the caller can decide whether
+    plan switching alone recovers the deficit."""
+    flow = stats.to_flow()
+    order, cost = ro3(flow)
+    return order, cost, headroom

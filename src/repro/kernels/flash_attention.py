@@ -1,0 +1,142 @@
+"""Flash attention (forward) as a Pallas TPU kernel.
+
+Blockwise online-softmax attention with GQA head grouping, causal masking
+and optional sliding windows.  Grid (B, Hq, nq, nkv) with the kv dimension
+innermost; running max/denominator/accumulator live in VMEM scratch and are
+initialized/finalized with ``pl.when`` on the kv index — the canonical TPU
+formulation (one output block is revisited across the kv sweep).
+
+Block shapes default to (128, 128): MXU-aligned on the matmul dims and small
+enough that q/k/v/acc tiles fit VMEM at head_dim <= 256.
+
+Dead blocks (entirely above the causal diagonal or entirely below the
+sliding window) are skipped with ``pl.when`` — the same block-level
+early-exit idea the filter_chain kernel borrows from the paper.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG = -1e30
+
+
+def _kernel(
+    q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref,
+    *, scale: float, causal: bool, window: int | None,
+    bq: int, bk: int, nkv: int, q_offset: int,
+):
+    ki = pl.program_id(3)
+    qi = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, _NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q_start = qi * bq + q_offset
+    k_start = ki * bk
+    run = True
+    if causal:
+        run = k_start <= q_start + bq - 1  # not fully above the diagonal
+    if window is not None:
+        run = jnp.logical_and(
+            run, k_start + bk - 1 >= q_start - window + 1
+        )  # not fully below the window
+
+    @pl.when(run)
+    def _block():
+        q = q_ref[0, 0].astype(jnp.float32) * scale  # (bq, Dq)
+        k = k_ref[0, 0].astype(jnp.float32)  # (bk, Dq)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )  # (bq, bk)
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        allowed = jnp.ones((bq, bk), dtype=jnp.bool_)
+        if causal:
+            allowed &= qpos >= kpos
+        if window is not None:
+            allowed &= (qpos - kpos) < window
+        s = jnp.where(allowed, s, _NEG)
+
+        m_prev = m_ref[...]  # (bq, 1)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)
+        p = jnp.where(allowed, p, 0.0)
+        l_ref[...] = alpha * l_ref[...] + jnp.sum(p, axis=1, keepdims=True)
+        v = v_ref[0, 0].astype(jnp.float32)  # (bk, Dv)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        m_ref[...] = m_new
+
+    @pl.when(ki == nkv - 1)
+    def _finalize():
+        l = l_ref[...]
+        o_ref[0, 0, :, :] = (
+            acc_ref[...] / jnp.where(l == 0.0, 1.0, l)
+        ).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "causal", "window", "block_q", "block_k", "q_offset", "interpret"
+    ),
+)
+def flash_attention(
+    q: jax.Array,  # (B, Hq, S, Dq)
+    k: jax.Array,  # (B, Hkv, T, Dq)
+    v: jax.Array,  # (B, Hkv, T, Dv)
+    causal: bool = True,
+    window: int | None = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    q_offset: int = 0,
+    interpret: bool = True,
+) -> jax.Array:
+    B, Hq, S, Dq = q.shape
+    Hkv, T, Dv = k.shape[1], k.shape[2], v.shape[3]
+    assert Hq % Hkv == 0, "GQA requires Hq to be a multiple of Hkv"
+    group = Hq // Hkv
+    bq = min(block_q, S)
+    bk = min(block_k, T)
+    assert S % bq == 0 and T % bk == 0, "pad seq to block multiples"
+    nq, nkv = S // bq, T // bk
+    scale = 1.0 / (Dq**0.5)
+
+    kernel = functools.partial(
+        _kernel,
+        scale=scale, causal=causal, window=window,
+        bq=bq, bk=bk, nkv=nkv, q_offset=q_offset,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(B, Hq, nq, nkv),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, Dq), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec(
+                (1, 1, bk, Dq), lambda b, h, i, j: (b, h // group, j, 0)
+            ),
+            pl.BlockSpec(
+                (1, 1, bk, Dv), lambda b, h, i, j: (b, h // group, j, 0)
+            ),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, Dv), lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hq, S, Dv), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, Dv), jnp.float32),  # output accumulator
+            pltpu.VMEM((bq, 1), jnp.float32),  # running row max
+            pltpu.VMEM((bq, 1), jnp.float32),  # running denominator
+        ],
+        interpret=interpret,
+    )(q, k, v)

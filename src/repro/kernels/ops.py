@@ -1,0 +1,66 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+``interpret`` defaults to True off-TPU so the kernels validate on CPU; on a
+TPU backend the same code compiles to Mosaic.  ``attention`` falls back to
+the jnp reference for shapes the kernel does not cover (ragged tails) and
+wires a reference backward pass via ``jax.custom_vjp`` so the flash forward
+is usable inside ``train_step``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .filter_chain import filter_chain
+from .flash_attention import flash_attention
+
+__all__ = ["filter_chain", "flash_attention", "attention", "on_tpu"]
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(
+    jax.custom_vjp, nondiff_argnums=(3, 4, 5)
+)
+def attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    causal: bool = True,
+    window: int | None = None,
+    q_offset: int = 0,
+) -> jax.Array:
+    """GQA attention: flash kernel forward when shapes align, reference
+    otherwise; reference (recompute) backward."""
+    S, T = q.shape[2], k.shape[2]
+    if S % 128 == 0 and T % 128 == 0 and on_tpu():
+        return flash_attention(
+            q, k, v, causal=causal, window=window, q_offset=q_offset,
+            interpret=False,
+        )
+    return ref.attention_ref(
+        q, k, v, causal=causal, window=window, q_offset=q_offset
+    )
+
+
+def _attention_fwd(q, k, v, causal, window, q_offset):
+    return attention(q, k, v, causal, window, q_offset), (q, k, v)
+
+
+def _attention_bwd(causal, window, q_offset, res, g):
+    q, k, v = res
+    _, vjp = jax.vjp(
+        lambda q, k, v: ref.attention_ref(
+            q, k, v, causal=causal, window=window, q_offset=q_offset
+        ),
+        q, k, v,
+    )
+    return vjp(g)
+
+
+attention.defvjp(_attention_fwd, _attention_bwd)

@@ -1,0 +1,88 @@
+"""Pure-jnp oracles for every Pallas kernel in this package."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def filter_chain_ref(
+    x: jax.Array,  # (N, F) feature matrix
+    feat: np.ndarray,  # (K,) feature index per predicate (static)
+    lo: jax.Array,  # (K,) inclusive lower bounds
+    hi: jax.Array,  # (K,) inclusive upper bounds
+) -> jax.Array:
+    """AND of K range predicates; order-invariant by construction."""
+    mask = jnp.ones(x.shape[0], dtype=bool)
+    for k in range(feat.shape[0]):
+        col = x[:, int(feat[k])]
+        mask = mask & (col >= lo[k]) & (col <= hi[k])
+    return mask
+
+
+def attention_ref(
+    q: jax.Array,  # (B, Hq, S, D)
+    k: jax.Array,  # (B, Hkv, T, D)
+    v: jax.Array,  # (B, Hkv, T, D)
+    causal: bool = True,
+    window: int | None = None,
+    q_offset: int = 0,
+) -> jax.Array:
+    """Reference GQA attention with optional causal + sliding-window mask.
+
+    ``q_offset`` is the absolute position of q[..., 0, :] (decode steps pass
+    the cache length).  f32 accumulation regardless of input dtype.
+    """
+    B, Hq, S, D = q.shape
+    Hkv, T = k.shape[1], k.shape[2]
+    group = Hq // Hkv
+    qf = q.astype(jnp.float32).reshape(B, Hkv, group, S, D)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    logits = jnp.einsum("bhgsd,bhtd->bhgst", qf, kf) / jnp.sqrt(
+        jnp.float32(D)
+    )
+    qpos = jnp.arange(S) + q_offset
+    kpos = jnp.arange(T)
+    mask = jnp.ones((S, T), dtype=bool)
+    if causal:
+        mask &= qpos[:, None] >= kpos[None, :]
+    if window is not None:
+        mask &= qpos[:, None] - kpos[None, :] < window
+    logits = jnp.where(mask[None, None, None], logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1)
+    probs = jnp.where(jnp.isnan(probs), 0.0, probs)  # fully-masked rows
+    out = jnp.einsum("bhgst,bhtd->bhgsd", probs, vf)
+    return out.reshape(B, Hq, S, D).astype(q.dtype)
+
+
+def ssd_ref(
+    x: jax.Array,  # (B, S, H, P)  inputs (already gated)
+    dt: jax.Array,  # (B, S, H)     softplus-activated step sizes
+    A: jax.Array,  # (H,)          negative state decay rates
+    Bm: jax.Array,  # (B, S, G, N)  input projections (G groups)
+    Cm: jax.Array,  # (B, S, G, N)  output projections
+) -> jax.Array:
+    """Reference SSD (Mamba-2 state-space duality) via explicit recurrence.
+
+    h_t = exp(A * dt_t) * h_{t-1} + dt_t * B_t x_t ;  y_t = C_t h_t
+    Heads are grouped: head h uses B/C group h // (H // G).
+    """
+    Bsz, S, H, P = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    rep = H // G
+    Bh = jnp.repeat(Bm, rep, axis=2)  # (B, S, H, N)
+    Ch = jnp.repeat(Cm, rep, axis=2)
+
+    decay = jnp.exp(A[None, None, :] * dt)  # (B, S, H)
+
+    def step(h, t):
+        # h: (B, H, P, N)
+        dB = dt[:, t, :, None, None] * Bh[:, t, :, None, :]  # (B, H, 1, N)
+        h = h * decay[:, t, :, None, None] + x[:, t, :, :, None] * dB
+        y = jnp.einsum("bhpn,bhn->bhp", h, Ch[:, t])
+        return h, y
+
+    h0 = jnp.zeros((Bsz, H, P, N), dtype=jnp.float32)
+    _, ys = jax.lax.scan(step, h0, jnp.arange(S))
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype)  # (B, S, H, P)

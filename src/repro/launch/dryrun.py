@@ -1,0 +1,430 @@
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+The XLA_FLAGS assignment below runs before any jax import: jax locks the
+device count at first init, and the dry-run needs 512 placeholder host
+devices to build the production meshes.  (Do NOT replicate this in
+conftest/pyproject — tests and benches want the real single device.)
+
+Two compiled artifacts feed the report:
+
+1. ROLLED, FULL DEPTH — the real program (scan-over-layers).  Proves the
+   sharded step compiles end-to-end and yields ``memory_analysis()``
+   (realistic buffer reuse -> does it fit 16 GiB/chip?).
+2. UNROLLED, REDUCED DEPTH x2 — XLA's HloCostAnalysis counts a while body
+   once regardless of trip count (verified), so FLOP/byte/collective totals
+   come from scan-unrolled compiles at two depths L1 and L2 = L1 + period,
+   extrapolated linearly: total = c(L1) + (L - L1)/period * (c(L2) - c(L1)).
+   Exact for homogeneous stacks; the period covers gemma3's 5:1 window
+   pattern, zamba2's shared-attention groups and deepseek's dense prefix.
+   Gradient accumulation is corrected exactly: step = accum * grad(micro)
+   + optimizer update, each counted separately.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-0.5b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--out results.json]
+"""
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+import argparse
+import dataclasses
+import json
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from ..configs import (
+    SHAPES,
+    get_config,
+    get_train_plan,
+    input_specs,
+    list_archs,
+    shape_skips,
+)
+from ..distributed.sharding import (
+    batch_pspec,
+    cache_pspecs,
+    make_train_sharder,
+    opt_state_pspecs,
+    param_pspecs,
+)
+from ..models import runtime_flags
+from ..models import transformer as T
+from ..training import adafactor, adamw, cosine_with_warmup, make_train_step
+from .mesh import make_production_mesh
+from .roofline import dominant_term, model_flops, roofline_terms, summarize
+
+P = jax.sharding.PartitionSpec
+
+_COUNT_KEYS = (
+    "flops_per_chip", "bytes_per_chip", "collective_bytes_per_chip",
+)
+
+
+def _optimizer(plan: dict):
+    sched = cosine_with_warmup(3e-4, 100, 10_000)
+    if plan.get("optimizer") == "adafactor":
+        return adafactor(sched)
+    return adamw(sched)
+
+
+def _dp_size(mesh) -> int:
+    n = 1
+    for a in ("pod", "data"):
+        if a in mesh.shape:
+            n *= mesh.shape[a]
+    return n
+
+
+def depth_period(cfg) -> int:
+    if cfg.window and cfg.global_every:
+        return cfg.global_every
+    if cfg.is_hybrid:
+        return cfg.shared_attn_every
+    return 1
+
+
+def reduced_depths(cfg) -> tuple[int, int, int]:
+    """(L1, L2, period) such that L == L1 (mod period) and extrapolation in
+    whole periods from L1 is exact for the layer stack."""
+    p = depth_period(cfg)
+    base = cfg.moe.first_k_dense if cfg.moe else 0
+    r = cfg.n_layers % p
+    L1 = base + p + r
+    while L1 < base + 2:  # at least two non-dense layers' worth
+        L1 += p
+    L2 = L1 + p
+    assert (cfg.n_layers - L1) % p == 0
+    return L1, L2, p
+
+
+def at_depth(cfg, n_layers: int):
+    return dataclasses.replace(cfg, n_layers=n_layers)
+
+
+def _batch_shardings(mesh, batch_struct):
+    bspec = batch_pspec(mesh)
+    dp_ax = bspec[0] if len(bspec) else None
+    ns = lambda spec: jax.sharding.NamedSharding(mesh, spec)
+    return jax.tree.map(
+        lambda s: ns(P(*([dp_ax] + [None] * (len(s.shape) - 1)))),
+        batch_struct,
+    )
+
+
+def _counts(compiled, n_chips) -> dict:
+    s = summarize(compiled, 0.0, n_chips)
+    out = {k: s[k] for k in _COUNT_KEYS}
+    for kind, v in s["collectives"].items():
+        out[f"coll:{kind}"] = v
+    return out
+
+
+def _combine(c1: dict, c2: dict, periods: float) -> dict:
+    """c(L1) + periods * (c(L2) - c(L1))."""
+    return {k: c1[k] + periods * (c2[k] - c1[k]) for k in c1}
+
+
+def _scaled(c: dict, f: float) -> dict:
+    return {k: v * f for k, v in c.items()}
+
+
+def _added(a: dict, b: dict) -> dict:
+    return {k: a[k] + b[k] for k in a}
+
+
+def lower_cell(
+    arch: str, shape_name: str, multi_pod: bool = False,
+    batch_override: int | None = None, cfg_override=None,
+    accum_override: int | None = None, fsdp_override: bool | None = None,
+    counts_only: bool = False,
+):
+    """Lower + compile one (arch, shape, mesh) cell; returns summary dict."""
+    cfg = cfg_override or get_config(arch)
+    plan = get_train_plan(arch)
+    if fsdp_override is not None:
+        plan["fsdp"] = fsdp_override
+    accum = accum_override or plan["accum_steps"]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.size
+    shd = make_train_sharder(mesh)
+    sh = SHAPES[shape_name]
+    B = batch_override or sh["batch"]
+    kind = sh["kind"]
+    ns = lambda spec: jax.sharding.NamedSharding(mesh, spec)
+
+    def params_of(c):
+        return jax.eval_shape(lambda: T.init_params(c, jax.random.PRNGKey(0)))
+
+    def shardings_of(c, ps):
+        return jax.tree.map(
+            ns, param_pspecs(ps, c, mesh, fsdp=plan["fsdp"])
+        )
+
+    t0 = time.time()
+    out: dict = {}
+    runtime_flags.set_serve_2d(False)
+    with mesh:
+        # ------------------------------------------------ 1. rolled, full
+        runtime_flags.set_unroll_scans(False)
+        full_params = params_of(cfg)
+        full_pspecs = param_pspecs(full_params, cfg, mesh, fsdp=plan["fsdp"])
+        full_shardings = jax.tree.map(ns, full_pspecs)
+        specs = input_specs(cfg, shape_name, batch_override=batch_override)
+
+        def build_lowered(c, params_struct, p_shardings, micro: int = 1):
+            """Lower the cell's step function for config ``c``."""
+            if kind == "train":
+                opt = _optimizer(plan)
+                opt_struct = jax.eval_shape(opt.init, params_struct)
+                o_shardings = jax.tree.map(
+                    ns,
+                    opt_state_pspecs(
+                        opt_struct, params_struct,
+                        param_pspecs(params_struct, c, mesh, fsdp=plan["fsdp"]),
+                    ),
+                )
+                batch_struct = {
+                    k: v for k, v in specs.items()
+                    if k in ("tokens", "labels", "prefix", "enc_inputs")
+                }
+                b_shardings = _batch_shardings(mesh, batch_struct)
+                step_fn = make_train_step(c, opt, accum, mesh=mesh, shd=shd)
+                return jax.jit(
+                    step_fn,
+                    in_shardings=(p_shardings, o_shardings, b_shardings, None),
+                    out_shardings=(p_shardings, o_shardings, None),
+                    donate_argnums=(0, 1),
+                ).lower(
+                    params_struct, opt_struct, batch_struct,
+                    jax.ShapeDtypeStruct((), jnp.int32),
+                )
+            if kind == "prefill":
+                def prefill_fn(params, batch):
+                    return T.prefill(
+                        params, c, batch["tokens"],
+                        prefix=batch.get("prefix"),
+                        enc_inputs=batch.get("enc_inputs"),
+                        mesh=mesh, shd=shd,
+                    )
+
+                batch_struct = {
+                    k: v for k, v in specs.items() if k != "labels"
+                }
+                b_shardings = _batch_shardings(mesh, batch_struct)
+                return jax.jit(
+                    prefill_fn, in_shardings=(p_shardings, b_shardings)
+                ).lower(params_struct, batch_struct)
+            # decode: serve-mode weight layout (resident, no FSDP gathers)
+            runtime_flags.set_serve_2d(True)
+            p_shardings = jax.tree.map(
+                ns,
+                param_pspecs(params_struct, c, mesh, fsdp=False, serve=True),
+            )
+            cache_struct = jax.eval_shape(
+                lambda: T.init_cache(c, B, sh["seq"])
+            )
+            c_shardings = jax.tree.map(
+                ns, cache_pspecs(cache_struct, mesh, batch=B)
+            )
+            bspec = batch_pspec(mesh)
+            dp_ax = bspec[0] if len(bspec) else None
+            tok_sharding = ns(
+                P(dp_ax, None)
+                if B % max(1, _dp_size(mesh)) == 0
+                else P(None, None)
+            )
+
+            def decode_fn(params, cache, tokens, pos):
+                return T.decode_step(
+                    params, c, cache, tokens, pos, mesh=mesh, shd=shd
+                )
+
+            return jax.jit(
+                decode_fn,
+                in_shardings=(p_shardings, c_shardings, tok_sharding, None),
+                donate_argnums=(1,),
+            ).lower(
+                params_struct, cache_struct, specs["tokens"], specs["pos"]
+            )
+
+        if not counts_only:
+            compiled_full = build_lowered(
+                cfg, full_params, full_shardings
+            ).compile()
+            mem = compiled_full.memory_analysis()
+            for attr in (
+                "argument_size_in_bytes", "output_size_in_bytes",
+                "temp_size_in_bytes", "generated_code_size_in_bytes",
+            ):
+                out[attr] = getattr(mem, attr, None)
+            out["rolled_compile_s"] = round(time.time() - t0, 1)
+
+        # --------------------------------- 2. unrolled, reduced, x2 depths
+        runtime_flags.set_unroll_scans(True)
+        L1, L2, period = reduced_depths(cfg)
+        periods = (cfg.n_layers - L1) / period
+
+        def counts_for_fn(make_fn, args_of):
+            cs = []
+            for L in (L1, L2):
+                c = at_depth(cfg, L)
+                ps = params_of(c)
+                shards = shardings_of(c, ps)
+                lowered = make_fn(c, ps, shards, args_of(c, ps))
+                cs.append(_counts(lowered.compile(), n_chips))
+            return _combine(cs[0], cs[1], periods)
+
+        if kind == "train":
+            opt = _optimizer(plan)
+            batch_struct = {
+                k: v for k, v in specs.items()
+                if k in ("tokens", "labels", "prefix", "enc_inputs")
+            }
+            micro_struct = jax.tree.map(
+                lambda s: jax.ShapeDtypeStruct(
+                    (s.shape[0] // accum,) + s.shape[1:], s.dtype
+                ),
+                batch_struct,
+            )
+            b_shardings = _batch_shardings(mesh, micro_struct)
+
+            def grad_lower(c, ps, shards, _):
+                def micro_fn(params, batch):
+                    return T.loss_fn(params, c, batch, mesh=mesh, shd=shd), \
+                        jax.grad(
+                            lambda p: T.loss_fn(p, c, batch, mesh=mesh, shd=shd)
+                        )(params)
+
+                return jax.jit(
+                    micro_fn, in_shardings=(shards, b_shardings)
+                ).lower(ps, micro_struct)
+
+            grad_counts = counts_for_fn(grad_lower, lambda c, ps: None)
+
+            def opt_lower(c, ps, shards, _):
+                opt_struct = jax.eval_shape(opt.init, ps)
+                o_shardings = jax.tree.map(
+                    ns,
+                    opt_state_pspecs(
+                        opt_struct, ps,
+                        param_pspecs(ps, c, mesh, fsdp=plan["fsdp"]),
+                    ),
+                )
+
+                def upd(params, state, grads):
+                    return opt.update(grads, state, params, 0)
+
+                return jax.jit(
+                    upd, in_shardings=(shards, o_shardings, shards),
+                ).lower(ps, opt_struct, ps)
+
+            opt_counts = counts_for_fn(opt_lower, lambda c, ps: None)
+            counts = _added(_scaled(grad_counts, accum), opt_counts)
+        else:
+            counts = counts_for_fn(
+                lambda c, ps, shards, _: build_lowered(c, ps, shards),
+                lambda c, ps: None,
+            )
+        runtime_flags.set_unroll_scans(False)
+        runtime_flags.set_serve_2d(False)
+
+    dt = time.time() - t0
+    mf = model_flops(cfg, kind, B, sh["seq"])
+    terms = roofline_terms(
+        counts["flops_per_chip"], counts["bytes_per_chip"],
+        counts["collective_bytes_per_chip"],
+    )
+    hlo_flops_global = counts["flops_per_chip"] * n_chips
+    out.update(counts)
+    out.update(terms)
+    out.update(
+        arch=arch, shape=shape_name, kind=kind,
+        mesh="2x16x16" if multi_pod else "16x16",
+        chips=n_chips, compile_seconds=round(dt, 1),
+        batch=B, seq=sh["seq"],
+        dominant=dominant_term(terms),
+        model_flops=mf,
+        useful_flops_ratio=(
+            mf / hlo_flops_global if hlo_flops_global else 0.0
+        ),
+        accum=accum if kind == "train" else None,
+    )
+    return out
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--counts-only", action="store_true",
+                    help="skip the rolled full-depth compile")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args(argv)
+
+    cells: list[tuple[str, str]] = []
+    archs = list_archs() if (args.all or not args.arch) else [args.arch]
+    for a in archs:
+        shapes = (
+            list(SHAPES) if (args.all or not args.shape) else [args.shape]
+        )
+        for s in shapes:
+            cells.append((a, s))
+
+    results = []
+    for a, s in cells:
+        skips = shape_skips(a)
+        if s in skips:
+            print(f"[skip] {a} x {s}: {skips[s]}", flush=True)
+            results.append(
+                {"arch": a, "shape": s, "status": "skipped",
+                 "reason": skips[s]}
+            )
+            continue
+        try:
+            r = lower_cell(
+                a, s, multi_pod=args.multi_pod,
+                counts_only=args.counts_only,
+            )
+            r["status"] = "ok"
+            temp = r.get("temp_size_in_bytes") or 0
+            print(
+                f"[ok]   {a} x {s} ({r['mesh']}): "
+                f"compute {r['compute_s']*1e3:.2f}ms "
+                f"memory {r['memory_s']*1e3:.2f}ms "
+                f"coll {r['collective_s']*1e3:.2f}ms "
+                f"dominant={r['dominant']} "
+                f"useful={r['useful_flops_ratio']:.2f} "
+                f"temp={temp/2**30:.2f}GiB "
+                f"(compile {r['compile_seconds']}s)",
+                flush=True,
+            )
+        except Exception as e:  # noqa: BLE001 — report, keep sweeping
+            traceback.print_exc()
+            r = {
+                "arch": a, "shape": s, "status": "error",
+                "error": f"{type(e).__name__}: {e}",
+            }
+            print(f"[FAIL] {a} x {s}: {r['error']}", file=sys.stderr,
+                  flush=True)
+        results.append(r)
+
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=1, default=str)
+        print(f"wrote {args.out}")
+    bad = [r for r in results if r.get("status") == "error"]
+    return 1 if bad else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

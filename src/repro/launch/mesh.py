@@ -1,0 +1,24 @@
+"""Production mesh construction.
+
+A function, not a module-level constant: importing this module never
+touches jax device state.  Single pod = 16x16 v5e (256 chips); multi-pod
+adds a leading "pod" axis (2 pods = 512 chips).  The pod axis composes with
+"data" for gradient reduction (hierarchical: reduce-scatter over the in-pod
+ICI, all-reduce across pods over DCI) — the model axis never crosses pods.
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "make_host_mesh"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """Degenerate 1x1 mesh for CPU tests/examples (same axis names)."""
+    return jax.make_mesh((1, 1), ("data", "model"))

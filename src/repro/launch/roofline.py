@@ -1,0 +1,136 @@
+"""Roofline term derivation from a compiled dry-run artifact.
+
+Per (arch, shape, mesh):
+    compute    = HLO_FLOPs_per_device / peak_FLOP/s         (197 TF bf16, v5e)
+    memory     = HLO_bytes_per_device / HBM_bw              (819 GB/s)
+    collective = collective_bytes_per_device / link_bw      (~50 GB/s ICI)
+
+``compiled.cost_analysis()`` is *per-partition* after SPMD partitioning, so
+the terms are per-chip directly.  Collective bytes are not in
+cost_analysis: we parse the post-partitioning HLO and sum operand bytes of
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute
+ops (operand size = wire bytes for AR-family on a ring; AG/RS move
+(n-1)/n of the full tensor — we report raw operand bytes, a consistent
+basis across plans, and the n-dependent correction cancels when comparing
+plans on the same mesh).
+"""
+from __future__ import annotations
+
+import re
+
+PEAK_FLOPS = 197e12  # bf16 per chip, TPU v5e
+HBM_BW = 819e9  # B/s per chip
+ICI_BW = 50e9  # B/s per link
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16, "s4": 1, "u4": 1,
+}
+
+_COLLECTIVES = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def collective_bytes(hlo_text: str) -> dict[str, int]:
+    """Sum operand bytes per collective kind from (partitioned) HLO text."""
+    out = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        m = re.match(r"^(%?[\w.\-]+)\s*=\s*(.+)$", s)
+        if not m:
+            continue
+        rhs = m.group(2)
+        kind = None
+        for k in _COLLECTIVES:
+            if re.search(rf"\b{k}(-start|-done)?\(", rhs):
+                kind = k
+                break
+        if kind is None:
+            continue
+        if re.search(rf"\b{kind}-done\(", rhs):
+            continue  # paired with -start; avoid double counting
+        # operand shapes: the shapes inside the call parens; fall back to
+        # the result shape(s) on the lhs of the call.
+        paren = rhs.split("(", 1)
+        arg_shapes = _SHAPE_RE.findall(paren[1]) if len(paren) > 1 else []
+        if not arg_shapes:
+            arg_shapes = _SHAPE_RE.findall(paren[0])
+        out[kind] += sum(_shape_bytes(d, s_) for d, s_ in arg_shapes)
+    return out
+
+
+def roofline_terms(
+    flops: float, bytes_accessed: float, coll_bytes: int
+) -> dict[str, float]:
+    return {
+        "compute_s": flops / PEAK_FLOPS,
+        "memory_s": bytes_accessed / HBM_BW,
+        "collective_s": coll_bytes / ICI_BW,
+    }
+
+
+def dominant_term(terms: dict[str, float]) -> str:
+    return max(
+        ("compute_s", "memory_s", "collective_s"), key=lambda k: terms[k]
+    )
+
+
+def summarize(
+    compiled, model_flops_global: float, n_chips: int
+) -> dict:
+    ca = compiled.cost_analysis() or {}
+    flops = float(ca.get("flops", 0.0))
+    byts = float(ca.get("bytes accessed", 0.0))
+    hlo = compiled.as_text()
+    coll = collective_bytes(hlo)
+    total_coll = sum(coll.values())
+    terms = roofline_terms(flops, byts, total_coll)
+    hlo_flops_global = flops * n_chips
+    out = {
+        "flops_per_chip": flops,
+        "bytes_per_chip": byts,
+        "collective_bytes_per_chip": total_coll,
+        "collectives": coll,
+        **terms,
+        "dominant": dominant_term(terms),
+        "model_flops": model_flops_global,
+        "useful_flops_ratio": (
+            model_flops_global / hlo_flops_global if hlo_flops_global else 0.0
+        ),
+    }
+    mem = compiled.memory_analysis()
+    for attr in (
+        "argument_size_in_bytes",
+        "output_size_in_bytes",
+        "temp_size_in_bytes",
+        "generated_code_size_in_bytes",
+    ):
+        out[attr] = getattr(mem, attr, None)
+    return out
+
+
+def model_flops(cfg, kind: str, batch: int, seq: int) -> float:
+    """MODEL_FLOPS = 6·N·D (dense) / 6·N_active·D (MoE); decode: D = batch
+    tokens (one step), prefill: no backward -> 2·N·D."""
+    n_active = cfg.active_param_count()
+    if kind == "train":
+        return 6.0 * n_active * batch * seq
+    if kind == "prefill":
+        return 2.0 * n_active * batch * seq
+    return 2.0 * n_active * batch  # decode: one token per sequence

@@ -1,0 +1,146 @@
+"""End-to-end training driver.
+
+Rank-stateless: on start it restores the latest committed checkpoint if one
+exists (model, optimizer, RNG, data cursor, pipeline-optimizer state) and
+continues — the restart contract of distributed/fault_tolerance.  The input
+pipeline is the paper's flow optimizer in the loop: costs/selectivities are
+measured online and the plan re-optimizes as the corpus drifts.
+
+Usage (CPU-scale example; the mesh is host-sized):
+  PYTHONPATH=src python -m repro.launch.train --arch qwen2-0.5b \
+      --steps 200 --batch 8 --seq 256 --scale 0.1 --ckpt-dir /tmp/ckpt
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs import get_config, get_smoke, get_train_plan
+from ..distributed.checkpoint import CheckpointManager
+from ..distributed.fault_tolerance import StepWatchdog
+from ..models import transformer as T
+from ..pipeline.loader import TokenLoader
+from ..training import adafactor, adamw, cosine_with_warmup, make_train_step
+
+
+def scaled_config(cfg, scale: float):
+    """Shrink a config for host-scale runs (depth/width, same family)."""
+    if scale >= 1.0:
+        return cfg
+    d = max(64, int(cfg.d_model * scale) // 16 * 16)
+    return dataclasses.replace(
+        cfg,
+        d_model=d,
+        n_layers=max(2, int(cfg.n_layers * scale)),
+        vocab=min(cfg.vocab, 8192),
+        n_heads=max(2, cfg.n_heads // 4) if cfg.n_heads else 0,
+        n_kv_heads=max(1, cfg.n_kv_heads // 4) if cfg.n_kv_heads else 0,
+        head_dim=64 if cfg.n_heads else None,
+        d_ff=max(128, int(cfg.d_ff * scale) // 16 * 16) if cfg.d_ff else 0,
+        dtype="float32",
+    )
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--scale", type=float, default=1.0,
+                    help="<1 shrinks the model for host-scale runs")
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced smoke config")
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--accum", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args(argv)
+
+    cfg = get_smoke(args.arch) if args.smoke else scaled_config(
+        get_config(args.arch), args.scale
+    )
+    plan = get_train_plan(args.arch)
+    sched = cosine_with_warmup(args.lr, 20, args.steps)
+    opt = (
+        adafactor(sched)
+        if plan["optimizer"] == "adafactor"
+        else adamw(sched)
+    )
+
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    opt_state = opt.init(params)
+    loader = TokenLoader(
+        batch=args.batch, seq=args.seq, vocab=cfg.vocab, doc_len=256,
+        docs_per_chunk=max(args.batch * 4, 64), seed=0,
+    )
+    step0 = 0
+    cm = None
+    if args.ckpt_dir:
+        cm = CheckpointManager(args.ckpt_dir, save_every=args.ckpt_every)
+        template = jax.device_get(
+            {"params": params, "opt": opt_state, "loader": loader.state_dict()}
+        )
+        restored, meta = cm.restore(template)
+        if restored is not None:
+            params = jax.tree.map(jnp.asarray, restored["params"])
+            opt_state = jax.tree.map(jnp.asarray, restored["opt"])
+            loader.load_state_dict(restored["loader"])
+            step0 = meta["step"] + 1
+            print(f"resumed from step {meta['step']}")
+
+    step_fn = jax.jit(make_train_step(cfg, opt, args.accum))
+    watchdog = StepWatchdog()
+    t_start = time.time()
+    for step in range(step0, args.steps):
+        batch = loader.next_batch()
+        feed = {
+            "tokens": jnp.asarray(batch["tokens"]),
+            "labels": jnp.asarray(batch["labels"]),
+        }
+        if cfg.prefix_embeddings:
+            feed["prefix"] = jnp.zeros(
+                (args.batch, cfg.prefix_embeddings, cfg.d_model), jnp.float32
+            )
+        if cfg.is_encdec:
+            feed["enc_inputs"] = jnp.zeros(
+                (args.batch, cfg.encoder_seq, cfg.d_model), jnp.float32
+            )
+        watchdog.start()
+        params, opt_state, metrics = step_fn(
+            params, opt_state, feed, jnp.int32(step)
+        )
+        slow = watchdog.stop()
+        if step % args.log_every == 0 or step == args.steps - 1:
+            print(
+                f"step {step}: loss={float(metrics['loss']):.4f} "
+                f"gnorm={float(metrics['grad_norm']):.3f} "
+                f"lr={float(metrics['lr']):.2e}"
+                + (" [straggler]" if slow else "")
+            )
+        if cm:
+            cm.maybe_save(
+                step,
+                {"params": params, "opt": opt_state,
+                 "loader": loader.state_dict()},
+            )
+    if cm:
+        cm.wait()
+    dt = time.time() - t_start
+    tok = (args.steps - step0) * args.batch * args.seq
+    print(
+        f"done: {args.steps - step0} steps, {tok} tokens, "
+        f"{tok / max(dt, 1e-9):.0f} tok/s; pipeline plan: "
+        f"{[loader.pipeline.ops[i].name for i in loader.pipeline.plan]}"
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,402 @@
+"""Attention blocks: GQA (+RoPE, bias, sliding window) and MLA (DeepSeek).
+
+The in-graph jnp path is used for training and the dry-run (clean HLO for
+the roofline); the Pallas flash kernel (repro.kernels) is the TPU-runtime
+drop-in, validated against the same math.  ``window`` may be a *traced*
+scalar (scan-over-layers feeds per-layer window sizes); window <= 0 means
+full attention.
+
+Decode uses absorbed-MLA (scores and context in the latent space — the
+memory win that motivates MLA) and in-place KV-cache updates for GQA.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import Sharder, identity_sharder, init_dense, rms_norm, rope
+
+_NEG = -1e30
+
+
+# Query-block size for the scanned attention path.  Blocking bounds the
+# materialized score tile to (B, H, BLOCK_Q, T) — the pure-jnp analogue of
+# the flash kernel's VMEM tiling, and what keeps 32k prefill / 4k train
+# activation temp linear in S (see EXPERIMENTS.md §Perf, iteration 1).
+BLOCK_Q = 256
+
+
+def _sdpa_body(q, k, v, q_pos, window, causal, scale):
+    """One attention evaluation: q (B, Hkv, G, bq, Dq) against full k/v."""
+    B, Hkv, G, bq, Dq = q.shape
+    T = k.shape[2]
+    scores = jnp.einsum(
+        "bkgsd,bktd->bkgst", q.astype(jnp.float32), k.astype(jnp.float32)
+    ) * scale
+    kpos = jnp.arange(T, dtype=jnp.int32)
+    mask = jnp.ones((B, bq, T), dtype=bool)
+    if causal:
+        mask &= kpos[None, None, :] <= q_pos[:, :, None]
+    if window is not None:
+        w = jnp.asarray(window, dtype=jnp.int32)
+        in_window = (q_pos[:, :, None] - kpos[None, None, :]) < w
+        mask &= in_window | (w <= 0)
+    scores = jnp.where(mask[:, None, None], scores, _NEG)
+    probs = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum(
+        "bkgst,bktd->bkgsd", probs, v.astype(jnp.float32)
+    )
+
+
+def sdpa(
+    q: jax.Array,  # (B, Hq, S, Dq)
+    k: jax.Array,  # (B, Hkv, T, Dq)
+    v: jax.Array,  # (B, Hkv, T, Dv)
+    q_pos: jax.Array,  # (B, S) absolute positions of queries
+    window,  # None | int | traced scalar (<=0 -> full)
+    causal: bool = True,
+    scale: float | None = None,
+    block_q: int = BLOCK_Q,
+) -> jax.Array:
+    B, Hq, S, Dq = q.shape
+    Hkv, T, Dv = k.shape[1], k.shape[2], v.shape[3]
+    group = Hq // Hkv
+    scale = scale if scale is not None else 1.0 / (Dq**0.5)
+    qf = q.reshape(B, Hkv, group, S, Dq)
+
+    if S <= block_q or S % block_q != 0:
+        out = _sdpa_body(qf, k, v, q_pos, window, causal, scale)
+        return out.reshape(B, Hq, S, Dv).astype(q.dtype)
+
+    nb = S // block_q
+    from . import runtime_flags
+
+    if causal and S == T:
+        # Self-attention from position 0 (all internal callers pass aligned
+        # arange positions here): skip kv blocks above the causal diagonal.
+        # A python macro-loop gives each macro a *static* kv upper bound —
+        # the attention analogue of the paper's block-level early exit —
+        # cutting score FLOPs toward the causal optimum (~2x at large nm).
+        nm = 16
+        while nb % nm != 0:
+            nm //= 2
+        per = nb // nm  # q blocks per macro
+        outs = []
+        for mi in range(nm):
+            k_lim = (mi + 1) * per * block_q
+            k_m, v_m = k[:, :, :k_lim], v[:, :, :k_lim]
+            q_m = qf[:, :, :, mi * per * block_q : (mi + 1) * per * block_q]
+            p_m = q_pos[:, mi * per * block_q : (mi + 1) * per * block_q]
+            if per == 1:
+                outs.append(
+                    _sdpa_body(q_m, k_m, v_m, p_m, window, causal, scale)
+                )
+            else:
+                qb = jnp.moveaxis(
+                    q_m.reshape(B, Hkv, group, per, block_q, Dq), 3, 0
+                )
+                pb = jnp.moveaxis(p_m.reshape(B, per, block_q), 1, 0)
+
+                def body(_, inp, k_m=k_m, v_m=v_m):
+                    qi, pi = inp
+                    return None, _sdpa_body(
+                        qi, k_m, v_m, pi, window, causal, scale
+                    )
+
+                _, o = jax.lax.scan(
+                    body, None, (qb, pb), unroll=runtime_flags.scan_unroll()
+                )
+                outs.append(
+                    jnp.moveaxis(o, 0, 3).reshape(
+                        B, Hkv, group, per * block_q, Dv
+                    )
+                )
+        out = jnp.concatenate(outs, axis=3)
+        return out.reshape(B, Hq, S, Dv).astype(q.dtype)
+
+    qb = jnp.moveaxis(
+        qf.reshape(B, Hkv, group, nb, block_q, Dq), 3, 0
+    )  # (nb, B, Hkv, G, bq, Dq)
+    pb = jnp.moveaxis(q_pos.reshape(B, nb, block_q), 1, 0)
+
+    def body(_, inp):
+        qi, pi = inp
+        return None, _sdpa_body(qi, k, v, pi, window, causal, scale)
+
+    _, outs = jax.lax.scan(
+        body, None, (qb, pb), unroll=runtime_flags.scan_unroll()
+    )
+    out = jnp.moveaxis(outs, 0, 3).reshape(B, Hkv, group, S, Dv)
+    return out.reshape(B, Hq, S, Dv).astype(q.dtype)
+
+
+def sharded_decode_attention(
+    q: jax.Array,  # (B, Hq, 1, D)
+    k: jax.Array,  # (B, Hkv, T, D) — T sharded over 'model'
+    v: jax.Array,  # (B, Hkv, T, D)
+    pos,  # scalar current position
+    window,  # None | traced scalar (<=0 full)
+    mesh,
+    scale: float,
+) -> jax.Array:
+    """Decode attention against a sequence-sharded cache.
+
+    When kv heads don't divide the model axis, the cache's only shardable
+    big dim is T — but XLA SPMD all-gathers a T-sharded operand to compute
+    softmax (13 GiB/step for internvl2-76b).  This shard_map computes the
+    numerically-stable partial softmax per T shard and combines (max,
+    denominator, weighted values) with tiny psums — the distributed flash
+    combine.  Wire cost per layer: O(B·Hq·Dv) instead of O(cache shard).
+    """
+    from jax.sharding import PartitionSpec as P
+
+    B, Hq, _, D = q.shape
+    Hkv, T = k.shape[1], k.shape[2]
+    group = Hq // Hkv
+    M = mesh.shape["model"]
+    dp = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    dp_sz = 1
+    for a in dp:
+        dp_sz *= mesh.shape[a]
+    dp_spec = dp if len(dp) > 1 else (dp[0] if dp else None)
+    batch_ax = dp_spec if (B % max(dp_sz, 1) == 0 and dp_sz > 1) else None
+    T_loc = T // M
+
+    def fn(q_l, k_l, v_l):
+        i = jax.lax.axis_index("model")
+        off = i * T_loc
+        Bl = q_l.shape[0]
+        qf = q_l.astype(jnp.float32).reshape(Bl, Hkv, group, 1, D)
+        s = jnp.einsum(
+            "bkgsd,bktd->bkgst", qf, k_l.astype(jnp.float32)
+        ) * scale  # (Bl, Hkv, G, 1, T_loc)
+        kpos = off + jnp.arange(T_loc, dtype=jnp.int32)
+        mask = kpos[None, :] <= jnp.asarray(pos, jnp.int32)
+        if window is not None:
+            w = jnp.asarray(window, jnp.int32)
+            mask = mask & (
+                ((jnp.asarray(pos, jnp.int32) - kpos[None, :]) < w) | (w <= 0)
+            )
+        s = jnp.where(mask[None, None, None], s, _NEG)
+        m_l = jnp.max(s, axis=-1, keepdims=True)
+        p = jnp.exp(s - m_l)
+        p = jnp.where(mask[None, None, None], p, 0.0)
+        l_l = jnp.sum(p, axis=-1, keepdims=True)  # (Bl,Hkv,G,1,1)
+        o_l = jnp.einsum("bkgst,bktd->bkgsd", p, v_l.astype(jnp.float32))
+        m_g = jax.lax.pmax(m_l, "model")
+        corr = jnp.exp(m_l - m_g)
+        l_g = jax.lax.psum(l_l * corr, "model")
+        o_g = jax.lax.psum(o_l * corr, "model")  # corr broadcasts over Dv
+        out = o_g / jnp.maximum(l_g, 1e-30)
+        return out.reshape(Bl, Hq, 1, v_l.shape[-1])
+
+    return jax.shard_map(
+        fn,
+        mesh=mesh,
+        in_specs=(
+            P(batch_ax, None, None, None),
+            P(batch_ax, None, "model", None),
+            P(batch_ax, None, "model", None),
+        ),
+        out_specs=P(batch_ax, None, None, None),
+        check_vma=False,
+    )(q, k, v).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------- GQA
+def init_gqa_params(key, cfg: ModelConfig, dtype) -> dict:
+    d, hq, hkv = cfg.d_model, cfg.n_heads, cfg.n_kv_heads
+    hd = cfg.resolved_head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": init_dense(ks[0], (d, hq * hd), dtype=dtype),
+        "wk": init_dense(ks[1], (d, hkv * hd), dtype=dtype),
+        "wv": init_dense(ks[2], (d, hkv * hd), dtype=dtype),
+        "wo": init_dense(ks[3], (hq * hd, d), dtype=dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((hq * hd,), dtype)
+        p["bk"] = jnp.zeros((hkv * hd,), dtype)
+        p["bv"] = jnp.zeros((hkv * hd,), dtype)
+    return p
+
+
+def gqa_forward(
+    x: jax.Array,  # (B, S, d)
+    p: dict,
+    cfg: ModelConfig,
+    *,
+    positions: jax.Array,  # (B, S)
+    window=None,
+    cache: dict | None = None,  # {"k","v"}: (B, Hkv, T, hd)
+    cache_pos: jax.Array | None = None,  # scalar write offset for decode
+    kv_from: jax.Array | None = None,  # cross-attention source (B, T, d)
+    use_rope: bool = True,
+    causal: bool = True,
+    shd: Sharder = identity_sharder,
+    mesh=None,
+) -> tuple[jax.Array, dict | None]:
+    B, S, d = x.shape
+    hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    q = jnp.einsum("bsd,dh->bsh", x, p["wq"])
+    kv_src = x if kv_from is None else kv_from
+    k = jnp.einsum("bsd,dh->bsh", kv_src, p["wk"])
+    v = jnp.einsum("bsd,dh->bsh", kv_src, p["wv"])
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(B, S, hq, hd).transpose(0, 2, 1, 3)
+    k = k.reshape(B, kv_src.shape[1], hkv, hd).transpose(0, 2, 1, 3)
+    v = v.reshape(B, kv_src.shape[1], hkv, hd).transpose(0, 2, 1, 3)
+    q = shd(q, "batch", "heads", "seq", None)
+    k = shd(k, "batch", "kv_heads", "seq", None)
+    v = shd(v, "batch", "kv_heads", "seq", None)
+    if use_rope and kv_from is None:
+        q = rope(q, positions[:, None, :, None][..., 0], cfg.rope_theta)
+        k = rope(k, positions[:, None, :, None][..., 0], cfg.rope_theta)
+
+    new_cache = None
+    if cache is not None:
+        if cache_pos is not None:  # decode: append and attend to the cache
+            ck = jax.lax.dynamic_update_slice(
+                cache["k"], k, (0, 0, cache_pos, 0)
+            )
+            cv = jax.lax.dynamic_update_slice(
+                cache["v"], v, (0, 0, cache_pos, 0)
+            )
+            new_cache = {"k": ck, "v": cv}
+            k, v = ck, cv
+        else:  # prefill: the computed k/v *is* the cache
+            new_cache = {"k": k, "v": v}
+
+    from . import runtime_flags
+
+    use_sharded_decode = (
+        cache_pos is not None
+        and runtime_flags.SERVE_2D
+        and mesh is not None
+        and "model" in mesh.shape
+        and mesh.shape["model"] > 1
+        and hkv % mesh.shape["model"] != 0  # heads can't shard; T must
+        and k.shape[2] % mesh.shape["model"] == 0
+    )
+    if use_sharded_decode:
+        out = sharded_decode_attention(
+            q, k, v, cache_pos, window, mesh, scale=1.0 / (hd**0.5)
+        )
+    else:
+        out = sdpa(q, k, v, positions, window, causal=causal)
+    out = out.transpose(0, 2, 1, 3).reshape(B, S, hq * hd)
+    return jnp.einsum("bsh,hd->bsd", out, p["wo"]), new_cache
+
+
+# ---------------------------------------------------------------------- MLA
+def init_mla_params(key, cfg: ModelConfig, dtype) -> dict:
+    m = cfg.mla
+    d, h = cfg.d_model, cfg.n_heads
+    qk = m.qk_nope_dim + m.qk_rope_dim
+    ks = jax.random.split(key, 5)
+    return {
+        "wq_a": init_dense(ks[0], (d, m.q_lora_rank), dtype=dtype),
+        "q_norm": jnp.zeros((m.q_lora_rank,), dtype),
+        "wq_b": init_dense(ks[1], (m.q_lora_rank, h * qk), dtype=dtype),
+        "wkv_a": init_dense(
+            ks[2], (d, m.kv_lora_rank + m.qk_rope_dim), dtype=dtype
+        ),
+        "kv_norm": jnp.zeros((m.kv_lora_rank,), dtype),
+        "wkv_b": init_dense(
+            ks[3], (m.kv_lora_rank, h * (m.qk_nope_dim + m.v_head_dim)),
+            dtype=dtype,
+        ),
+        "wo": init_dense(ks[4], (h * m.v_head_dim, d), dtype=dtype),
+    }
+
+
+def _mla_q(x, p, cfg, positions):
+    m = cfg.mla
+    B, S, _ = x.shape
+    h = cfg.n_heads
+    cq = rms_norm(
+        jnp.einsum("bsd,dr->bsr", x, p["wq_a"]), p["q_norm"], cfg.norm_eps
+    )
+    q = jnp.einsum("bsr,rh->bsh", cq, p["wq_b"]).reshape(
+        B, S, h, m.qk_nope_dim + m.qk_rope_dim
+    )
+    q_nope, q_rope = q[..., : m.qk_nope_dim], q[..., m.qk_nope_dim :]
+    q_rope = rope(
+        q_rope.transpose(0, 2, 1, 3), positions[:, None, :], cfg.rope_theta
+    ).transpose(0, 2, 1, 3)
+    return q_nope, q_rope  # (B, S, H, nope), (B, S, H, rope)
+
+
+def _mla_latent(x, p, cfg, positions):
+    m = cfg.mla
+    ckv_full = jnp.einsum("bsd,dr->bsr", x, p["wkv_a"])
+    c_kv = rms_norm(
+        ckv_full[..., : m.kv_lora_rank], p["kv_norm"], cfg.norm_eps
+    )
+    k_rope = ckv_full[..., m.kv_lora_rank :]  # (B, S, rope) shared per head
+    k_rope = rope(k_rope, positions, cfg.rope_theta)
+    return c_kv, k_rope
+
+
+def mla_forward(
+    x: jax.Array,
+    p: dict,
+    cfg: ModelConfig,
+    *,
+    positions: jax.Array,
+    cache: dict | None = None,  # {"c_kv": (B,T,r), "k_rope": (B,T,rope)}
+    cache_pos: jax.Array | None = None,
+    shd: Sharder = identity_sharder,
+) -> tuple[jax.Array, dict | None]:
+    """MLA attention.  Prefill/train uses the expanded form; decode uses the
+    absorbed (latent-space) form against the compressed cache."""
+    m = cfg.mla
+    B, S, d = x.shape
+    h = cfg.n_heads
+    q_nope, q_rope = _mla_q(x, p, cfg, positions)
+    c_kv, k_rope = _mla_latent(x, p, cfg, positions)
+
+    new_cache = None
+    if cache is not None and cache_pos is not None:
+        c_kv = jax.lax.dynamic_update_slice(
+            cache["c_kv"], c_kv, (0, cache_pos, 0)
+        )
+        k_rope = jax.lax.dynamic_update_slice(
+            cache["k_rope"], k_rope, (0, cache_pos, 0)
+        )
+        new_cache = {"c_kv": c_kv, "k_rope": k_rope}
+    elif cache is not None:
+        new_cache = {"c_kv": c_kv, "k_rope": k_rope}
+
+    wkv_b = p["wkv_b"].reshape(m.kv_lora_rank, h, m.qk_nope_dim + m.v_head_dim)
+    w_knope = wkv_b[..., : m.qk_nope_dim]  # (r, H, nope)
+    w_v = wkv_b[..., m.qk_nope_dim :]  # (r, H, vdim)
+
+    # Absorbed MLA == GQA with ONE shared kv head in the latent space:
+    #   q_cat = [q_nope @ w_knope, q_rope]   (B, H, S, r + rope)
+    #   k_cat = [c_kv, k_rope]               (B, 1, T, r + rope)
+    #   v     = c_kv                         (B, 1, T, r)
+    # which rides the blocked sdpa path (score tile bounded to BLOCK_Q).
+    q_lat = jnp.einsum(
+        "bshn,rhn->bshr", q_nope.astype(jnp.float32),
+        w_knope.astype(jnp.float32),
+    )
+    q_cat = jnp.concatenate(
+        [q_lat, q_rope.astype(jnp.float32)], axis=-1
+    ).transpose(0, 2, 1, 3)  # (B, H, S, r+rope)
+    k_cat = jnp.concatenate(
+        [c_kv.astype(jnp.float32), k_rope.astype(jnp.float32)], axis=-1
+    )[:, None]  # (B, 1, T, r+rope)
+    v_lat = c_kv.astype(jnp.float32)[:, None]  # (B, 1, T, r)
+    ctx_lat = sdpa(
+        q_cat, k_cat, v_lat, positions, None, causal=True,
+        scale=1.0 / ((m.qk_nope_dim + m.qk_rope_dim) ** 0.5),
+    )  # (B, H, S, r)
+    ctx = jnp.einsum(
+        "bhsr,rhv->bshv", ctx_lat.astype(jnp.float32),
+        w_v.astype(jnp.float32),
+    )
+    ctx = ctx.reshape(B, S, h * m.v_head_dim).astype(x.dtype)
+    return jnp.einsum("bsh,hd->bsd", ctx, p["wo"]), new_cache

@@ -1,0 +1,182 @@
+"""Model configuration covering all ten assigned architectures.
+
+One config dataclass drives a single generic implementation; feature blocks
+(GQA / MLA / MoE / SSD / sliding windows / enc-dec / modality stubs) switch
+on their sub-configs.  Exact published numbers live in repro.configs.*.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int
+    top_k: int
+    d_ff_expert: int
+    n_shared: int = 0  # shared (always-on) experts
+    first_k_dense: int = 0  # leading dense layers (deepseek: 3)
+    capacity_factor: float = 1.25
+
+
+@dataclasses.dataclass(frozen=True)
+class MLAConfig:
+    q_lora_rank: int
+    kv_lora_rank: int
+    qk_nope_dim: int
+    qk_rope_dim: int
+    v_head_dim: int
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    d_state: int
+    n_heads: int
+    head_dim: int  # P
+    n_groups: int = 1
+    conv_width: int = 4
+    expand: int = 2  # d_inner = expand * d_model
+    chunk: int = 128  # SSD chunk length
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    d_model: int
+    n_layers: int
+    vocab: int
+    # attention (n_heads == 0 -> attention-free)
+    n_heads: int = 0
+    n_kv_heads: int = 0
+    head_dim: int | None = None
+    qkv_bias: bool = False
+    rope_theta: float = 10_000.0
+    # sliding windows: every `global_every`-th layer is global, others use
+    # `window` (gemma3: window=1024, global_every=6 -> 5:1 local:global)
+    window: int | None = None
+    global_every: int = 0  # 0 -> all layers global/full
+    d_ff: int = 0
+    mlp_gated: bool = True  # SwiGLU; False -> plain GELU (starcoder2)
+    moe: MoEConfig | None = None
+    mla: MLAConfig | None = None
+    ssm: SSMConfig | None = None
+    # layer mix: "attn" | "ssm" | "hybrid" (ssm backbone + shared attn block
+    # every `shared_attn_every` layers, zamba2-style)
+    block_type: str = "attn"
+    shared_attn_every: int = 0
+    # encoder-decoder (whisper): encoder_layers > 0 adds an encoder stack +
+    # cross attention in every decoder layer; frontend embeddings replace
+    # token embedding on the encoder side
+    encoder_layers: int = 0
+    encoder_seq: int = 0  # fixed encoder length (whisper: 1500)
+    # modality stub: number of precomputed prefix embeddings prepended to
+    # the token sequence (internvl2 patches); input_specs supplies them
+    prefix_embeddings: int = 0
+    tie_embeddings: bool = True
+    norm_eps: float = 1e-6
+    dtype: str = "bfloat16"
+    remat: bool = True  # checkpoint each layer in train_step
+    # beyond-paper perf knobs (see EXPERIMENTS.md §Perf)
+    loss_chunk: int = 0  # chunked cross-entropy (0 = unchunked)
+
+    # ------------------------------------------------------------- helpers
+    @property
+    def resolved_head_dim(self) -> int:
+        if self.head_dim is not None:
+            return self.head_dim
+        return self.d_model // max(self.n_heads, 1)
+
+    @property
+    def is_ssm(self) -> bool:
+        return self.block_type == "ssm"
+
+    @property
+    def is_hybrid(self) -> bool:
+        return self.block_type == "hybrid"
+
+    @property
+    def is_encdec(self) -> bool:
+        return self.encoder_layers > 0
+
+    def layer_windows(self) -> list[int]:
+        """Per-layer window size; 0 means full/global attention."""
+        if not self.window or not self.global_every:
+            return [self.window or 0] * self.n_layers
+        return [
+            0 if (i + 1) % self.global_every == 0 else self.window
+            for i in range(self.n_layers)
+        ]
+
+    def param_count(self) -> int:
+        """Approximate parameter count (embedding + blocks), for 6ND."""
+        d, L, V = self.d_model, self.n_layers, self.vocab
+        total = V * d * (1 if self.tie_embeddings else 2)
+        hd = self.resolved_head_dim
+
+        def attn_params() -> int:
+            if self.mla:
+                m = self.mla
+                qk = m.qk_nope_dim + m.qk_rope_dim
+                return (
+                    d * m.q_lora_rank
+                    + m.q_lora_rank * self.n_heads * qk
+                    + d * (m.kv_lora_rank + m.qk_rope_dim)
+                    + m.kv_lora_rank
+                    * self.n_heads
+                    * (m.qk_nope_dim + m.v_head_dim)
+                    + self.n_heads * m.v_head_dim * d
+                )
+            return (
+                d * self.n_heads * hd
+                + 2 * d * self.n_kv_heads * hd
+                + self.n_heads * hd * d
+            )
+
+        def mlp_params(ff: int) -> int:
+            return (3 if self.mlp_gated else 2) * d * ff
+
+        def ssm_params() -> int:
+            s = self.ssm
+            d_in = s.expand * d
+            conv_dim = d_in + 2 * s.n_groups * s.d_state
+            return (
+                d * (2 * d_in + 2 * s.n_groups * s.d_state + s.n_heads)
+                + conv_dim * s.conv_width
+                + d_in * d
+                + 3 * s.n_heads
+            )
+
+        per_layer = 0
+        if self.is_ssm or self.is_hybrid:
+            per_layer = ssm_params()
+            total += L * per_layer
+            if self.is_hybrid and self.shared_attn_every:
+                total += attn_params() + mlp_params(self.d_ff)
+        else:
+            for li in range(L):
+                p = attn_params()
+                if self.moe and li >= self.moe.first_k_dense:
+                    p += (self.moe.num_experts + self.moe.n_shared) * mlp_params(
+                        self.moe.d_ff_expert
+                    ) + d * self.moe.num_experts
+                else:
+                    p += mlp_params(self.d_ff)
+                total += p
+        if self.is_encdec:
+            # encoder layers + cross-attention in decoder layers
+            total += self.encoder_layers * (attn_params() + mlp_params(self.d_ff))
+            total += L * attn_params()
+        return total
+
+    def active_param_count(self) -> int:
+        """Active params per token (MoE: top_k + shared experts only)."""
+        if not self.moe:
+            return self.param_count()
+        m = self.moe
+        full_experts = m.num_experts + m.n_shared
+        active_experts = m.top_k + m.n_shared
+        moe_layers = self.n_layers - m.first_k_dense
+        expert_p = 3 * self.d_model * m.d_ff_expert
+        return self.param_count() - moe_layers * (
+            full_experts - active_experts
+        ) * expert_p

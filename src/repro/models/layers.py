@@ -1,0 +1,103 @@
+"""Common building blocks: norms, MLP, RoPE, sharding helper."""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+# ---------------------------------------------------------------- sharding
+# A Sharder maps logical axis names to a with_sharding_constraint.  The
+# launch layer installs real rules; tests run with the identity default.
+Sharder = Callable[..., jax.Array]
+
+
+def identity_sharder(x: jax.Array, *logical_axes: str | None) -> jax.Array:
+    return x
+
+
+def make_sharder(mesh, rules: dict[str, str | tuple[str, ...] | None]) -> Sharder:
+    """Resolve logical axes -> mesh axes, dropping non-divisible ones."""
+
+    def axis_size(a) -> int:
+        if a is None:
+            return 1
+        if isinstance(a, tuple):
+            out = 1
+            for x in a:
+                out *= mesh.shape[x]
+            return out
+        return mesh.shape[a]
+
+    def shard(x: jax.Array, *logical_axes: str | None) -> jax.Array:
+        assert len(logical_axes) == x.ndim, (logical_axes, x.shape)
+        spec = []
+        used: set[str] = set()
+        for dim, name in zip(x.shape, logical_axes):
+            mesh_ax = rules.get(name) if name else None
+            if mesh_ax is None:
+                spec.append(None)
+                continue
+            flat = mesh_ax if isinstance(mesh_ax, tuple) else (mesh_ax,)
+            if any(a in used for a in flat) or dim % axis_size(mesh_ax) != 0:
+                spec.append(None)  # non-divisible or duplicate: replicate
+                continue
+            used.update(flat)
+            spec.append(mesh_ax)
+        return jax.lax.with_sharding_constraint(
+            x, jax.sharding.NamedSharding(mesh, P(*spec))
+        )
+
+    return shard
+
+
+# ------------------------------------------------------------------ layers
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    norm = xf * jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    return (norm * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+def gated_mlp(
+    x: jax.Array, wi_gate: jax.Array, wi_up: jax.Array, wo: jax.Array,
+    shd: Sharder = identity_sharder,
+) -> jax.Array:
+    """SwiGLU MLP; activations constrained ('batch','seq','mlp')."""
+    gate = jnp.einsum("bsd,df->bsf", x, wi_gate)
+    up = jnp.einsum("bsd,df->bsf", x, wi_up)
+    h = jax.nn.silu(gate) * up
+    h = shd(h, "batch", "seq", "mlp")
+    return jnp.einsum("bsf,fd->bsd", h, wo)
+
+
+def rope(
+    x: jax.Array,  # (..., S, D) with D even
+    positions: jax.Array,  # (S,) or (B, S)
+    theta: float,
+) -> jax.Array:
+    """Rotary position embedding (half-split convention)."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = jnp.exp(
+        -jnp.arange(0, half, dtype=jnp.float32) * (jnp.log(theta) / half)
+    )
+    ang = positions.astype(jnp.float32)[..., None] * freqs  # (..., S, half)
+    # broadcast ang to x's batch/head dims: x (..., S, D), ang (S, half)
+    while ang.ndim < x.ndim:
+        ang = ang[None]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    )
+    return out.astype(x.dtype)
+
+
+def init_dense(key, shape, scale: float | None = None, dtype=jnp.float32):
+    fan_in = shape[0] if len(shape) >= 2 else 1
+    scale = scale if scale is not None else fan_in**-0.5
+    return (jax.random.normal(key, shape, dtype=jnp.float32) * scale).astype(
+        dtype
+    )

@@ -1,0 +1,203 @@
+"""Mixture-of-Experts layer: sigmoid router, top-k, shared experts.
+
+Dispatch is sort-free scatter into per-expert capacity buffers (GShard-style
+dropping, but without the (N, E, C) one-hot einsum whose memory is
+prohibitive at DeepSeek scale).  Two execution paths share the math:
+
+* plain (single device / pure pjit): full (E, C, d) buffer; XLA SPMD shards
+  the expert dim of the einsums via the weight shardings.
+* shard_map expert-parallel: tokens stay data-sharded, experts stay
+  model-sharded; each (data, model) shard scatters *its* tokens bound for
+  *its* experts into a local (E/model, C_loc, d) buffer — no all-to-all —
+  and the per-shard partial outputs are psum'ed over the model axis (the
+  same collective a TP MLP needs, so MoE costs one reduce, not a reshuffle).
+
+Capacity: C = ceil(tokens_local * top_k / E * capacity_factor); assignments
+beyond capacity are dropped (mode="drop" scatter), matching GShard
+semantics.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from .config import ModelConfig
+from .layers import Sharder, identity_sharder, init_dense
+
+__all__ = ["init_moe_params", "moe_apply"]
+
+
+def init_moe_params(key, cfg: ModelConfig, n_layers: int, dtype) -> dict:
+    """Stacked (n_layers, ...) MoE params for scan-over-layers."""
+    m = cfg.moe
+    d, E, ff = cfg.d_model, m.num_experts, m.d_ff_expert
+    ks = jax.random.split(key, 7)
+    p = {
+        "router": init_dense(ks[0], (n_layers, d, E), dtype=jnp.float32),
+        "wi_gate": init_dense(ks[1], (n_layers, E, d, ff), dtype=dtype),
+        "wi_up": init_dense(ks[2], (n_layers, E, d, ff), dtype=dtype),
+        "wo": init_dense(ks[3], (n_layers, E, ff, d), dtype=dtype),
+    }
+    if m.n_shared:
+        sf = ff * m.n_shared
+        p["shared_gate"] = init_dense(ks[4], (n_layers, d, sf), dtype=dtype)
+        p["shared_up"] = init_dense(ks[5], (n_layers, d, sf), dtype=dtype)
+        p["shared_down"] = init_dense(ks[6], (n_layers, sf, d), dtype=dtype)
+    return p
+
+
+def _route(xf: jax.Array, router: jax.Array, top_k: int):
+    """Sigmoid scores, top-k, normalize among the selected (DeepSeek-V3)."""
+    scores = jax.nn.sigmoid(
+        jnp.einsum("nd,de->ne", xf.astype(jnp.float32), router)
+    )
+    weights, idx = jax.lax.top_k(scores, top_k)  # (N, k)
+    weights = weights / (jnp.sum(weights, axis=-1, keepdims=True) + 1e-9)
+    return weights, idx
+
+
+def _expert_ffn(buf, wi_gate, wi_up, wo):
+    g = jnp.einsum("ecd,edf->ecf", buf, wi_gate)
+    u = jnp.einsum("ecd,edf->ecf", buf, wi_up)
+    return jnp.einsum("ecf,efd->ecd", jax.nn.silu(g) * u, wo)
+
+
+def _dispatch_ffn_combine(
+    xf: jax.Array,  # (N, d) local tokens
+    idx: jax.Array,  # (N, k) global expert ids
+    weights: jax.Array,  # (N, k)
+    wi_gate: jax.Array,  # (E_loc, d, ff) local expert weights
+    wi_up: jax.Array,
+    wo: jax.Array,
+    e_offset,  # first global expert id owned locally (traced or 0)
+    capacity: int,
+) -> jax.Array:
+    N, d = xf.shape
+    k = idx.shape[1]
+    E_loc = wi_gate.shape[0]
+    flat_e = idx.reshape(-1) - e_offset  # local expert id; OOB if not ours
+    flat_w = weights.reshape(-1)
+    tok = jnp.arange(N * k, dtype=jnp.int32) // k
+    ours = (flat_e >= 0) & (flat_e < E_loc)
+    # position within expert = how many earlier assignments hit it
+    onehot_rank = jnp.where(ours, flat_e, E_loc)  # park foreign in a bin
+    seg = jax.nn.one_hot(onehot_rank, E_loc + 1, dtype=jnp.int32)
+    pos = (jnp.cumsum(seg, axis=0) - seg)[
+        jnp.arange(N * k), onehot_rank
+    ]  # (N*k,) rank among same-expert assignments
+    pos = jnp.where(ours, pos, capacity)  # foreign/overflow -> dropped
+    buf = jnp.zeros((E_loc, capacity, d), xf.dtype)
+    buf = buf.at[flat_e, pos].set(xf[tok], mode="drop")
+    out_buf = _expert_ffn(buf, wi_gate, wi_up, wo)
+    gathered = out_buf.at[flat_e, pos].get(
+        mode="fill", fill_value=0
+    )  # (N*k, d)
+    contrib = jnp.zeros((N, d), xf.dtype)
+    contrib = contrib.at[tok].add(gathered * flat_w[:, None].astype(xf.dtype))
+    return contrib
+
+
+def moe_apply(
+    x: jax.Array,  # (B, S, d)
+    p: dict,  # one layer's slice of init_moe_params
+    cfg: ModelConfig,
+    shd: Sharder = identity_sharder,
+    mesh: jax.sharding.Mesh | None = None,
+) -> jax.Array:
+    m = cfg.moe
+    B, S, d = x.shape
+    xf = x.reshape(B * S, d)
+
+    from . import runtime_flags
+
+    serve_2d = (
+        runtime_flags.SERVE_2D
+        and mesh is not None
+        and "data" in mesh.shape
+        and mesh.shape["data"] > 1
+        and m.d_ff_expert % mesh.shape["data"] == 0
+        and "model" in mesh.shape
+        and m.num_experts % mesh.shape["model"] == 0
+    )
+    if serve_2d:
+        # decode path: replicate the (tiny) token batch, keep weights fully
+        # distributed (experts x ffn-shard) — see runtime_flags.SERVE_2D.
+        E_loc = m.num_experts // mesh.shape["model"]
+        cap = max(int(B * S * m.top_k / m.num_experts * m.capacity_factor), 4)
+        # NOT the pod axis: pods hold identical replicas and compute the
+        # same partials — summing them would double the result.
+
+        def serve_fn(xf_all, router, wi_gate, wi_up, wo):
+            weights, idx = _route(xf_all, router, m.top_k)
+            e_off = jax.lax.axis_index("model") * E_loc
+            out = _dispatch_ffn_combine(
+                xf_all, idx, weights, wi_gate, wi_up, wo, e_off, cap
+            )
+            # partial over the local ffn shard AND the local experts
+            return jax.lax.psum(out, axis_name=("data", "model"))
+
+        routed = jax.shard_map(
+            serve_fn,
+            mesh=mesh,
+            in_specs=(
+                P(None, None),  # tokens replicated (KBs at decode)
+                P(None, None),
+                P("model", None, "data"),
+                P("model", None, "data"),
+                P("model", "data", None),
+            ),
+            out_specs=P(None, None),
+            check_vma=False,
+        )(xf, p["router"], p["wi_gate"], p["wi_up"], p["wo"])
+    elif mesh is not None and "model" in mesh.shape and mesh.shape["model"] > 1:
+        E_loc = m.num_experts // mesh.shape["model"]
+        dp_axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+        n_dp = 1
+        for a in dp_axes:
+            n_dp *= mesh.shape[a]
+        n_loc = (B * S) // n_dp
+        cap = max(
+            int(n_loc * m.top_k / m.num_experts * m.capacity_factor), 4
+        )
+
+        def shard_fn(xf_loc, router, wi_gate, wi_up, wo):
+            weights, idx = _route(xf_loc, router, m.top_k)
+            e_off = jax.lax.axis_index("model") * E_loc
+            out = _dispatch_ffn_combine(
+                xf_loc, idx, weights, wi_gate, wi_up, wo, e_off, cap
+            )
+            return jax.lax.psum(out, axis_name="model")
+
+        routed = jax.shard_map(
+            shard_fn,
+            mesh=mesh,
+            in_specs=(
+                P(dp_axes if dp_axes else None, None),
+                P(None, None),
+                P("model", None, None),
+                P("model", None, None),
+                P("model", None, None),
+            ),
+            out_specs=P(dp_axes if dp_axes else None, None),
+            check_vma=False,
+        )(xf, p["router"], p["wi_gate"], p["wi_up"], p["wo"])
+    else:
+        weights, idx = _route(xf, p["router"], m.top_k)
+        cap = max(
+            int(B * S * m.top_k / m.num_experts * m.capacity_factor), 4
+        )
+        routed = _dispatch_ffn_combine(
+            xf, idx, weights, p["wi_gate"], p["wi_up"], p["wo"], 0, cap
+        )
+
+    out = routed.reshape(B, S, d)
+    if m.n_shared:
+        g = jnp.einsum("bsd,df->bsf", x, p["shared_gate"])
+        u = jnp.einsum("bsd,df->bsf", x, p["shared_up"])
+        out = out + jnp.einsum(
+            "bsf,fd->bsd", jax.nn.silu(g) * u, p["shared_down"]
+        )
+    return out

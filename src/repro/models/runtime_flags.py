@@ -1,0 +1,34 @@
+"""Process-wide tracing flags.
+
+``UNROLL_SCANS`` — when True, structural scans (layers, q-blocks, loss
+chunks) trace with ``unroll=True``.  XLA's HloCostAnalysis counts a while
+body ONCE regardless of trip count (verified empirically), so the roofline
+dry-run unrolls scans to obtain correct FLOP/byte totals from the compiled
+artifact.  Training/serving leave this False: rolled scans compile faster
+and bound live buffers.  Gradient-accumulation scans stay rolled even in
+the dry-run — every accumulation iteration is identical, so the dry-run
+multiplies its counts analytically instead (exact by construction).
+"""
+
+UNROLL_SCANS = False
+
+# SERVE_2D — decode-path MoE: tokens are replicated across the mesh inside
+# the expert layer (a one-token batch is KBs) and expert weights stay fully
+# distributed in 2D (experts x ffn-shard) — no FSDP parameter gathers on
+# the latency path.  Training/prefill amortize gathers over ~1M tokens and
+# keep the FSDP layout.
+SERVE_2D = False
+
+
+def set_unroll_scans(value: bool) -> None:
+    global UNROLL_SCANS
+    UNROLL_SCANS = bool(value)
+
+
+def scan_unroll() -> int | bool:
+    return True if UNROLL_SCANS else 1
+
+
+def set_serve_2d(value: bool) -> None:
+    global SERVE_2D
+    SERVE_2D = bool(value)

@@ -1,0 +1,220 @@
+"""Mamba-2 (SSD: state-space duality) block.
+
+Training/prefill uses the chunked SSD algorithm (quadratic within chunks of
+length ``chunk``, linear state passing across chunks via lax.scan); decode
+uses the O(1)-state recurrence.  The causal depthwise conv (width 4) over
+the x/B/C projections is implemented as a sum of shifted taps (cheap and
+shape-friendly); its decode state carries the trailing ``width-1`` inputs.
+
+All state math in f32; weights/activations in the model dtype.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import Sharder, identity_sharder, init_dense, rms_norm
+
+__all__ = ["init_ssm_params", "ssm_forward", "ssm_decode_step", "init_ssm_cache"]
+
+
+def _dims(cfg: ModelConfig):
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    conv_dim = d_in + 2 * s.n_groups * s.d_state
+    return s, d_in, conv_dim
+
+
+def init_ssm_params(key, cfg: ModelConfig, n_layers: int, dtype) -> dict:
+    s, d_in, conv_dim = _dims(cfg)
+    d = cfg.d_model
+    proj_out = 2 * d_in + 2 * s.n_groups * s.d_state + s.n_heads
+    ks = jax.random.split(key, 4)
+    L = n_layers
+    return {
+        "w_in": init_dense(ks[0], (L, d, proj_out), dtype=dtype),
+        "conv_w": init_dense(
+            ks[1], (L, s.conv_width, conv_dim), scale=0.5, dtype=dtype
+        ),
+        "conv_b": jnp.zeros((L, conv_dim), dtype),
+        "A_log": jnp.zeros((L, s.n_heads), jnp.float32),
+        "D": jnp.ones((L, s.n_heads), jnp.float32),
+        "dt_bias": jnp.zeros((L, s.n_heads), jnp.float32),
+        "gate_norm": jnp.zeros((L, d_in), dtype),
+        "w_out": init_dense(ks[2], (L, d_in, d), dtype=dtype),
+    }
+
+
+def _split_proj(zxbcdt, cfg: ModelConfig):
+    s, d_in, conv_dim = _dims(cfg)
+    z = zxbcdt[..., :d_in]
+    xbc = zxbcdt[..., d_in : d_in + conv_dim]
+    dt = zxbcdt[..., d_in + conv_dim :]
+    return z, xbc, dt
+
+
+def _conv_taps(xbc, conv_w, conv_b, prev=None):
+    """Causal depthwise conv as shifted taps.  xbc (B, S, C); conv_w (W, C).
+    ``prev`` (B, W-1, C) prepends decode state."""
+    W = conv_w.shape[0]
+    if prev is None:
+        prev = jnp.zeros(xbc.shape[:1] + (W - 1, xbc.shape[-1]), xbc.dtype)
+    full = jnp.concatenate([prev, xbc], axis=1)  # (B, S+W-1, C)
+    S = xbc.shape[1]
+    out = sum(
+        full[:, w : w + S, :] * conv_w[w][None, None, :] for w in range(W)
+    )
+    new_state = full[:, -(W - 1) :, :]
+    return jax.nn.silu(out + conv_b[None, None, :]), new_state
+
+
+def _ssd_chunked(x, dt, A, Bm, Cm, chunk: int):
+    """Chunked SSD scan.  x (B,S,H,P), dt (B,S,H), A (H,), B/C (B,S,G,N)."""
+    Bs, S, H, Pd = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    rep = H // G
+    Bh = jnp.repeat(Bm, rep, axis=2).astype(jnp.float32)  # (B,S,H,N)
+    Ch = jnp.repeat(Cm, rep, axis=2).astype(jnp.float32)
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+
+    Q = min(chunk, S)
+    S0 = S
+    pad = (-S) % Q
+    if pad:  # state-neutral padding: dt=0 -> decay 1, zero input
+        xf = jnp.pad(xf, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dtf = jnp.pad(dtf, ((0, 0), (0, pad), (0, 0)))
+        Bh = jnp.pad(Bh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Ch = jnp.pad(Ch, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        S = S + pad
+    nc = S // Q
+    xr = xf.reshape(Bs, nc, Q, H, Pd)
+    dtr = dtf.reshape(Bs, nc, Q, H)
+    Br = Bh.reshape(Bs, nc, Q, H, N)
+    Cr = Ch.reshape(Bs, nc, Q, H, N)  # noqa: shaped views of the inputs
+
+    a = A[None, None, None, :] * dtr  # (B,nc,Q,H), negative
+    cum = jnp.cumsum(a, axis=2)  # inclusive within chunk
+    # intra-chunk quadratic term: decay(i,j) = exp(cum_i - cum_j) for j <= i.
+    # Mask BEFORE exponentiating: the j > i differences are positive and can
+    # overflow, and inf * 0 in the backward pass would poison the grads.
+    ii = jnp.arange(Q)
+    tri = ii[:, None] >= ii[None, :]
+    diff = cum[:, :, :, None, :] - cum[:, :, None, :, :]
+    diff = jnp.where(tri[None, None, :, :, None], diff, -jnp.inf)
+    decay = jnp.exp(diff)  # (B,nc,Q,Q,H)
+    scores = jnp.einsum("bcqhn,bckhn->bcqkh", Cr, Br) * decay
+    y_intra = jnp.einsum("bcqkh,bckh,bckhp->bcqhp", scores, dtr, xr)
+
+    # chunk-final states and cross-chunk recurrence
+    seg_end = jnp.exp(cum[:, :, -1:, :] - cum)  # decay from t to chunk end
+    states = jnp.einsum(
+        "bcqh,bcqh,bcqhn,bcqhp->bchnp", seg_end[:, :, :, :], dtr, Br, xr
+    )  # wait: seg_end already (B,nc,Q,H)
+    chunk_decay = jnp.exp(cum[:, :, -1, :])  # (B,nc,H) total chunk decay
+
+    def scan_fn(h, inp):
+        st, dec = inp  # (B,H,N,P), (B,H)
+        h_new = h * dec[:, :, None, None] + st
+        return h_new, h  # emit state *entering* the chunk
+
+    sts = jnp.moveaxis(states, 1, 0)  # (nc,B,H,N,P)
+    decs = jnp.moveaxis(chunk_decay, 1, 0)  # (nc,B,H)
+    h0 = jnp.zeros((Bs, H, N, Pd), jnp.float32)
+    h_last, h_in = jax.lax.scan(scan_fn, h0, (sts, decs))
+    h_in = jnp.moveaxis(h_in, 0, 1)  # (B,nc,H,N,P) state entering each chunk
+
+    in_decay = jnp.exp(cum)  # decay from chunk start to t (inclusive of t)
+    y_inter = jnp.einsum(
+        "bcqhn,bcqh,bchnp->bcqhp", Cr, in_decay, h_in
+    )
+    y = (y_intra + y_inter).reshape(Bs, S, H, Pd)[:, :S0]
+    return y.astype(x.dtype), h_last
+
+
+def ssm_forward(
+    x: jax.Array,  # (B, S, d)
+    p: dict,  # one layer's params
+    cfg: ModelConfig,
+    shd: Sharder = identity_sharder,
+    return_state: bool = False,
+):
+    s, d_in, conv_dim = _dims(cfg)
+    zxbcdt = jnp.einsum("bsd,dk->bsk", x, p["w_in"])
+    z, xbc_raw, dt = _split_proj(zxbcdt, cfg)
+    xbc, _ = _conv_taps(xbc_raw, p["conv_w"], p["conv_b"])
+    xin = xbc[..., :d_in]
+    Bm = xbc[..., d_in : d_in + s.n_groups * s.d_state].reshape(
+        x.shape[0], x.shape[1], s.n_groups, s.d_state
+    )
+    Cm = xbc[..., d_in + s.n_groups * s.d_state :].reshape(
+        x.shape[0], x.shape[1], s.n_groups, s.d_state
+    )
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    xh = xin.reshape(x.shape[0], x.shape[1], s.n_heads, s.head_dim)
+    xh = shd(xh, "batch", "seq", "heads", None)
+    y, h_last = _ssd_chunked(xh, dt, A, Bm, Cm, cfg.ssm.chunk)
+    y = y + (p["D"][None, None, :, None] * xh.astype(jnp.float32)).astype(y.dtype)
+    y = y.reshape(x.shape[0], x.shape[1], d_in)
+    y = rms_norm(y * jax.nn.silu(z), p["gate_norm"], cfg.norm_eps)
+    out = jnp.einsum("bsk,kd->bsd", y, p["w_out"])
+    if return_state:
+        W = s.conv_width
+        pad = jnp.zeros(
+            (x.shape[0], max(W - 1 - x.shape[1], 0), conv_dim), xbc_raw.dtype
+        )
+        conv_state = jnp.concatenate([pad, xbc_raw], axis=1)[:, -(W - 1) :]
+        return out, {"h": h_last, "conv": conv_state}
+    return out
+
+
+# ------------------------------------------------------------------ decode
+def init_ssm_cache(cfg: ModelConfig, n_layers: int, batch: int, dtype):
+    s, d_in, conv_dim = _dims(cfg)
+    return {
+        "h": jnp.zeros(
+            (n_layers, batch, s.n_heads, s.d_state, s.head_dim), jnp.float32
+        ),
+        "conv": jnp.zeros(
+            (n_layers, batch, s.conv_width - 1, conv_dim), dtype
+        ),
+    }
+
+
+def ssm_decode_step(
+    x: jax.Array,  # (B, 1, d)
+    p: dict,
+    cache: dict,  # one layer's {"h": (B,H,N,P), "conv": (B,W-1,C)}
+    cfg: ModelConfig,
+) -> tuple[jax.Array, dict]:
+    s, d_in, conv_dim = _dims(cfg)
+    B = x.shape[0]
+    zxbcdt = jnp.einsum("bsd,dk->bsk", x, p["w_in"])
+    z, xbc, dt = _split_proj(zxbcdt, cfg)
+    xbc, conv_state = _conv_taps(
+        xbc, p["conv_w"], p["conv_b"], prev=cache["conv"]
+    )
+    xin = xbc[..., :d_in]
+    Bm = xbc[:, 0, d_in : d_in + s.n_groups * s.d_state].reshape(
+        B, s.n_groups, s.d_state
+    )
+    Cm = xbc[:, 0, d_in + s.n_groups * s.d_state :].reshape(
+        B, s.n_groups, s.d_state
+    )
+    rep = s.n_heads // s.n_groups
+    Bh = jnp.repeat(Bm, rep, axis=1).astype(jnp.float32)  # (B,H,N)
+    Ch = jnp.repeat(Cm, rep, axis=1).astype(jnp.float32)
+    dtf = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"])  # (B,H)
+    A = -jnp.exp(p["A_log"])
+    xh = xin[:, 0].reshape(B, s.n_heads, s.head_dim).astype(jnp.float32)
+    decay = jnp.exp(A[None] * dtf)  # (B,H)
+    h = cache["h"] * decay[:, :, None, None] + jnp.einsum(
+        "bh,bhn,bhp->bhnp", dtf, Bh, xh
+    )
+    y = jnp.einsum("bhnp,bhn->bhp", h, Ch) + p["D"][None, :, None] * xh
+    y = y.reshape(B, 1, d_in).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["gate_norm"], cfg.norm_eps)
+    out = jnp.einsum("bsk,kd->bsd", y, p["w_out"])
+    return out, {"h": h, "conv": conv_state}

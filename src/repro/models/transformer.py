@@ -1,0 +1,669 @@
+"""Generic config-driven model: decoder LMs (dense/MoE/MLA/SSM/hybrid),
+encoder-decoder (whisper) and prefix-embedding VLMs (internvl2).
+
+Layers are *scanned* (stacked (L, ...) params + lax.scan) — compile time and
+HLO size stay flat in depth, which matters for 61-80 layer dry-runs.  Layer
+heterogeneity is handled by:
+
+* per-layer scalars scanned alongside params (sliding-window sizes);
+* separate scans per block family (deepseek: dense prefix + MoE suffix);
+* nested scans for periodic structure (zamba2: 9 groups x 6 mamba layers,
+  one shared attention block applied per group).
+
+``forward`` returns final hidden states; ``loss_fn`` computes (optionally
+seq-chunked) cross-entropy; ``prefill``/``decode_step`` implement serving.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from . import runtime_flags
+from .attention import gqa_forward, init_gqa_params, init_mla_params, mla_forward
+from .config import ModelConfig
+from .layers import Sharder, identity_sharder, init_dense, rms_norm
+from .moe import init_moe_params, moe_apply
+from .ssm import init_ssm_cache, init_ssm_params, ssm_decode_step, ssm_forward
+
+Params = dict[str, Any]
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+# ----------------------------------------------------------------- initing
+def _init_attn_mlp_blocks(key, cfg: ModelConfig, n_layers: int, moe: bool):
+    dt = _dtype(cfg)
+    d = cfg.d_model
+    ks = jax.random.split(key, n_layers)
+
+    def one(k):
+        k1, k2, k3, k4, k5 = jax.random.split(k, 5)
+        blk = {
+            "ln1": jnp.zeros((d,), dt),
+            "ln2": jnp.zeros((d,), dt),
+            "attn": (
+                init_mla_params(k1, cfg, dt)
+                if cfg.mla
+                else init_gqa_params(k1, cfg, dt)
+            ),
+        }
+        if not moe:
+            blk["mlp"] = {
+                "up": init_dense(k3, (d, cfg.d_ff), dtype=dt),
+                "down": init_dense(k4, (cfg.d_ff, d), dtype=dt),
+            }
+            if cfg.mlp_gated:
+                blk["mlp"]["gate"] = init_dense(k2, (d, cfg.d_ff), dtype=dt)
+        return blk
+
+    blocks = [one(k) for k in ks]
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *blocks)
+    if moe:
+        stacked["moe"] = init_moe_params(key, cfg, n_layers, dt)
+    return stacked
+
+
+def init_params(cfg: ModelConfig, key) -> Params:
+    dt = _dtype(cfg)
+    d, V = cfg.d_model, cfg.vocab
+    keys = jax.random.split(key, 8)
+    params: Params = {
+        "embed": init_dense(keys[0], (V, d), scale=0.02, dtype=dt),
+        "final_norm": jnp.zeros((d,), dt),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = init_dense(keys[7], (d, V), dtype=dt)
+
+    if cfg.is_ssm:
+        params["blocks"] = init_ssm_params(keys[1], cfg, cfg.n_layers, dt)
+        params["ssm_norms"] = jnp.zeros((cfg.n_layers, d), dt)
+    elif cfg.is_hybrid:
+        params["blocks"] = init_ssm_params(keys[1], cfg, cfg.n_layers, dt)
+        params["ssm_norms"] = jnp.zeros((cfg.n_layers, d), dt)
+        shared = _init_attn_mlp_blocks(keys[2], cfg, 1, moe=False)
+        params["shared_attn"] = jax.tree.map(lambda x: x[0], shared)
+    else:
+        if cfg.moe and cfg.moe.first_k_dense:
+            params["blocks_dense"] = _init_attn_mlp_blocks(
+                keys[1], cfg, cfg.moe.first_k_dense, moe=False
+            )
+            params["blocks"] = _init_attn_mlp_blocks(
+                keys[2], cfg, cfg.n_layers - cfg.moe.first_k_dense, moe=True
+            )
+        else:
+            params["blocks"] = _init_attn_mlp_blocks(
+                keys[1], cfg, cfg.n_layers, moe=cfg.moe is not None
+            )
+
+    if cfg.is_encdec:
+        params["enc_blocks"] = _init_attn_mlp_blocks(
+            keys[3], cfg, cfg.encoder_layers, moe=False
+        )
+        params["enc_pos"] = init_dense(
+            keys[4], (cfg.encoder_seq, d), scale=0.02, dtype=dt
+        )
+        params["enc_norm"] = jnp.zeros((d,), dt)
+        params["xattn"] = jax.tree.map(
+            lambda *xs: jnp.stack(xs),
+            *[
+                {
+                    "lnx": jnp.zeros((d,), dt),
+                    "attn": init_gqa_params(k, cfg, dt),
+                }
+                for k in jax.random.split(keys[5], cfg.n_layers)
+            ],
+        )
+    return params
+
+
+# ----------------------------------------------------------------- blocks
+def _mlp(h, p, shd):
+    u = jnp.einsum("bsd,df->bsf", h, p["up"])
+    if "gate" in p:
+        g = jnp.einsum("bsd,df->bsf", h, p["gate"])
+        act = jax.nn.silu(g) * u
+    else:
+        act = jax.nn.gelu(u)
+    act = shd(act, "batch", "seq", "mlp")
+    return jnp.einsum("bsf,fd->bsd", act, p["down"])
+
+
+def _attn_block(
+    h, p, cfg, *, positions, window, cache=None, cache_pos=None,
+    mesh=None, shd=identity_sharder, moe: bool = False, causal=True,
+):
+    x = rms_norm(h, p["ln1"], cfg.norm_eps)
+    if cfg.mla:
+        attn_out, new_cache = mla_forward(
+            x, p["attn"], cfg, positions=positions,
+            cache=cache, cache_pos=cache_pos, shd=shd,
+        )
+    else:
+        attn_out, new_cache = gqa_forward(
+            x, p["attn"], cfg, positions=positions, window=window,
+            cache=cache, cache_pos=cache_pos, shd=shd, causal=causal,
+            mesh=mesh,
+        )
+    h = h + attn_out
+    x = rms_norm(h, p["ln2"], cfg.norm_eps)
+    if moe:
+        h = h + moe_apply(x, p["moe"], cfg, shd=shd, mesh=mesh)
+    else:
+        h = h + _mlp(x, p["mlp"], shd)
+    return h, new_cache
+
+
+def _scan(fn, h, xs, remat: bool):
+    if remat:
+        fn = jax.checkpoint(fn)
+    return jax.lax.scan(fn, h, xs, unroll=runtime_flags.scan_unroll())
+
+
+def _windows_arr(cfg: ModelConfig, n_layers: int) -> jax.Array:
+    w = cfg.layer_windows()
+    if cfg.moe and cfg.moe.first_k_dense and n_layers != cfg.n_layers:
+        if n_layers == cfg.moe.first_k_dense:
+            w = w[: n_layers]
+        else:
+            w = w[cfg.n_layers - n_layers :]
+    return jnp.asarray(w[:n_layers], dtype=jnp.int32)
+
+
+# ---------------------------------------------------------------- forward
+def forward(
+    params: Params,
+    cfg: ModelConfig,
+    tokens: jax.Array,  # (B, S) int32
+    *,
+    prefix: jax.Array | None = None,  # (B, P, d) modality stub embeddings
+    enc_inputs: jax.Array | None = None,  # (B, T_enc, d) whisper frames
+    mesh=None,
+    shd: Sharder = identity_sharder,
+    return_cache: bool = False,
+):
+    """Full-sequence forward; returns (hidden, caches) — caches None unless
+    ``return_cache`` (prefill)."""
+    B, S = tokens.shape
+    h = params["embed"][tokens]  # (B, S, d)
+    if prefix is not None:
+        h = jnp.concatenate([prefix.astype(h.dtype), h], axis=1)
+        S = h.shape[1]
+    h = shd(h, "batch", "seq", "embed")
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+
+    enc_out = None
+    if cfg.is_encdec:
+        assert enc_inputs is not None
+        e = enc_inputs.astype(h.dtype) + params["enc_pos"][None]
+        epos = jnp.broadcast_to(
+            jnp.arange(e.shape[1], dtype=jnp.int32), (B, e.shape[1])
+        )
+
+        def enc_body(hh, xs):
+            out, _ = _attn_block(
+                hh, xs, cfg, positions=epos, window=None, causal=False,
+                shd=shd, mesh=mesh,
+            )
+            return out, None
+
+        e, _ = _scan(enc_body, e, params["enc_blocks"], cfg.remat)
+        enc_out = rms_norm(e, params["enc_norm"], cfg.norm_eps)
+
+    caches = {}
+    if cfg.is_ssm or cfg.is_hybrid:
+        h, caches = _ssm_stack(
+            params, cfg, h, positions, mesh=mesh, shd=shd,
+            return_cache=return_cache,
+        )
+    else:
+        if "blocks_dense" in params:
+            wins = _windows_arr(cfg, cfg.moe.first_k_dense)
+
+            def dense_body(hh, xs):
+                blk, w = xs
+                out, c = _attn_block(
+                    hh, blk, cfg, positions=positions, window=w,
+                    mesh=mesh, shd=shd, moe=False,
+                    cache={} if return_cache else None,
+                )
+                return out, c
+
+            h, c_dense = _scan(
+                dense_body, h, (params["blocks_dense"], wins), cfg.remat
+            )
+            if return_cache:
+                caches["dense"] = c_dense
+            n_moe = cfg.n_layers - cfg.moe.first_k_dense
+        else:
+            n_moe = cfg.n_layers
+
+        is_moe = cfg.moe is not None
+        wins = _windows_arr(cfg, n_moe)
+
+        def body(hh, xs):
+            blk, w = xs
+            out, c = _attn_block(
+                hh, blk, cfg, positions=positions, window=w,
+                mesh=mesh, shd=shd, moe=is_moe,
+                cache={} if return_cache else None,
+            )
+            return out, c
+
+        xs = (params["blocks"], wins)
+        if cfg.is_encdec:
+
+            def body_encdec(hh, xs):
+                blk, xblk, w = xs
+                out, c = _attn_block(
+                    hh, blk, cfg, positions=positions, window=w,
+                    mesh=mesh, shd=shd, moe=False,
+                    cache={} if return_cache else None,
+                )
+                xx = rms_norm(out, xblk["lnx"], cfg.norm_eps)
+                xout, xc = gqa_forward(
+                    xx, xblk["attn"], cfg, positions=positions,
+                    kv_from=enc_out, use_rope=False, causal=False,
+                    cache={} if return_cache else None, shd=shd,
+                )
+                if return_cache:
+                    c = {"self": c, "cross": xc}
+                return out + xout, c
+
+            h, cs = _scan(
+                body_encdec, h, (params["blocks"], params["xattn"], wins),
+                cfg.remat,
+            )
+        else:
+            h, cs = _scan(body, h, xs, cfg.remat)
+        if return_cache:
+            caches["blocks"] = cs
+
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    return h, (caches if return_cache else None)
+
+
+def _ssm_stack(params, cfg, h, positions, *, mesh, shd, return_cache):
+    """SSM / hybrid stack (train & prefill).  For hybrid, layers are scanned
+    in groups of ``shared_attn_every`` with one shared attention block per
+    group (decode lives in ``decode_step``)."""
+
+    def ssm_body(hh, xs):
+        blk, norm = xs
+        out = ssm_forward(
+            rms_norm(hh, norm, cfg.norm_eps), blk, cfg, shd=shd,
+            return_state=return_cache,
+        )
+        if return_cache:
+            out, state = out
+            return hh + out, state
+        return hh + out, None
+
+    if cfg.is_ssm:
+        h, states = _scan(
+            ssm_body, h, (params["blocks"], params["ssm_norms"]), cfg.remat
+        )
+        return h, ({"ssm": states} if return_cache else {})
+
+    # hybrid: groups of k mamba layers + shared attention application
+    k = cfg.shared_attn_every
+    n_groups = cfg.n_layers // k
+    grouped = jax.tree.map(
+        lambda x: x.reshape((n_groups, k) + x.shape[1:]), params["blocks"]
+    )
+    norms = params["ssm_norms"].reshape(n_groups, k, -1)
+    shared = params["shared_attn"]
+
+    def group_body(hh, xs):
+        blks, ns = xs
+        hh, states = _scan(ssm_body, hh, (blks, ns), False)
+        out, new_c = _attn_block(
+            hh, shared, cfg, positions=positions, window=None,
+            mesh=mesh, shd=shd, moe=False,
+            cache={} if return_cache else None,
+        )
+        return out, (states, new_c)
+
+    body = jax.checkpoint(group_body) if cfg.remat else group_body
+    h, (states, cs) = jax.lax.scan(
+        body, h, (grouped, norms), unroll=runtime_flags.scan_unroll()
+    )
+    if not return_cache:
+        return h, {}
+    # states: (G, k, B, ...) -> (L, B, ...)
+    flat = jax.tree.map(
+        lambda x: x.reshape((n_groups * k,) + x.shape[2:]), states
+    )
+    return h, {"ssm": flat, "shared_attn": cs}
+
+
+# ------------------------------------------------------------------- loss
+def loss_fn(
+    params: Params,
+    cfg: ModelConfig,
+    batch: dict,
+    *,
+    mesh=None,
+    shd: Sharder = identity_sharder,
+) -> jax.Array:
+    """Cross-entropy with optional sequence chunking of the logits."""
+    h, _ = forward(
+        params, cfg, batch["tokens"],
+        prefix=batch.get("prefix"), enc_inputs=batch.get("enc_inputs"),
+        mesh=mesh, shd=shd,
+    )
+    labels = batch["labels"]
+    if batch.get("prefix") is not None:
+        h = h[:, batch["prefix"].shape[1] :]  # loss only on token positions
+    head = (
+        params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    )
+
+    def chunk_loss(h_c, y_c):
+        logits = jnp.einsum("bsd,dv->bsv", h_c, head).astype(jnp.float32)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(
+            logits, y_c[..., None].astype(jnp.int32), axis=-1
+        )[..., 0]
+        return jnp.sum(logz - gold)
+
+    B, S = labels.shape
+    chunk = cfg.loss_chunk or S
+    if S % chunk != 0:
+        chunk = S
+    n_chunks = S // chunk
+    if n_chunks > 1:
+        hc = h.reshape(B, n_chunks, chunk, -1).swapaxes(0, 1)
+        yc = labels.reshape(B, n_chunks, chunk).swapaxes(0, 1)
+
+        def scan_body(tot, xs):
+            return tot + chunk_loss(*xs), None
+
+        from . import runtime_flags as _rf
+
+        total, _ = jax.lax.scan(
+            scan_body, jnp.float32(0.0), (hc, yc), unroll=_rf.scan_unroll()
+        )
+    else:
+        total = chunk_loss(h, labels)
+    return total / (B * S)
+
+
+# ------------------------------------------------------------- serving API
+def pad_cache(cfg: ModelConfig, cache: dict, max_len: int) -> dict:
+    """Grow a prefill cache's sequence axis to ``max_len`` (decode buffers).
+
+    GQA k/v have the seq axis at -2; MLA c_kv/k_rope at -2; SSM states carry
+    no seq axis; cross-attention caches are already full-length."""
+
+    def walk(node):
+        if isinstance(node, dict):
+            return {k: walk(v) for k, v in node.items()}
+        t = node.shape[-2]
+        if t >= max_len:
+            return node
+        pad = [(0, 0)] * node.ndim
+        pad[-2] = (0, max_len - t)
+        return jnp.pad(node, pad)
+
+    out = {}
+    for k, v in cache.items():
+        if k == "ssm":
+            out[k] = v
+        elif isinstance(v, dict) and "cross" in v:
+            out[k] = {"self": walk(v["self"]), "cross": v["cross"]}
+        else:
+            out[k] = walk(v)
+    return out
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> dict:
+    dt = _dtype(cfg)
+    hd = cfg.resolved_head_dim
+    caches: dict = {}
+    if cfg.is_ssm:
+        return {"ssm": init_ssm_cache(cfg, cfg.n_layers, batch, dt)}
+    if cfg.is_hybrid:
+        n_groups = cfg.n_layers // cfg.shared_attn_every
+        return {
+            "ssm": init_ssm_cache(cfg, cfg.n_layers, batch, dt),
+            "shared_attn": {
+                "k": jnp.zeros(
+                    (n_groups, batch, cfg.n_kv_heads, max_len, hd), dt
+                ),
+                "v": jnp.zeros(
+                    (n_groups, batch, cfg.n_kv_heads, max_len, hd), dt
+                ),
+            },
+        }
+    if cfg.mla:
+        m = cfg.mla
+        caches["blocks"] = {
+            "c_kv": jnp.zeros(
+                (cfg.n_layers - (cfg.moe.first_k_dense if cfg.moe else 0),
+                 batch, max_len, m.kv_lora_rank), dt
+            ),
+            "k_rope": jnp.zeros(
+                (cfg.n_layers - (cfg.moe.first_k_dense if cfg.moe else 0),
+                 batch, max_len, m.qk_rope_dim), dt
+            ),
+        }
+        if cfg.moe and cfg.moe.first_k_dense:
+            caches["dense"] = {
+                "c_kv": jnp.zeros(
+                    (cfg.moe.first_k_dense, batch, max_len, m.kv_lora_rank),
+                    dt,
+                ),
+                "k_rope": jnp.zeros(
+                    (cfg.moe.first_k_dense, batch, max_len, m.qk_rope_dim),
+                    dt,
+                ),
+            }
+        return caches
+    n_l = cfg.n_layers
+    kv = lambda L: {
+        "k": jnp.zeros((L, batch, cfg.n_kv_heads, max_len, hd), dt),
+        "v": jnp.zeros((L, batch, cfg.n_kv_heads, max_len, hd), dt),
+    }
+    if cfg.moe and cfg.moe.first_k_dense:
+        caches["dense"] = kv(cfg.moe.first_k_dense)
+        caches["blocks"] = kv(n_l - cfg.moe.first_k_dense)
+    else:
+        caches["blocks"] = kv(n_l)
+    if cfg.is_encdec:
+        cross = {
+            "k": jnp.zeros(
+                (n_l, batch, cfg.n_kv_heads, cfg.encoder_seq, hd), dt
+            ),
+            "v": jnp.zeros(
+                (n_l, batch, cfg.n_kv_heads, cfg.encoder_seq, hd), dt
+            ),
+        }
+        caches["blocks"] = {"self": caches["blocks"], "cross": cross}
+    return caches
+
+
+def prefill(
+    params: Params, cfg: ModelConfig, tokens: jax.Array, *,
+    prefix=None, enc_inputs=None, mesh=None, shd=identity_sharder,
+):
+    """Run the full prompt; returns (last-position logits, cache)."""
+    h, caches = forward(
+        params, cfg, tokens, prefix=prefix, enc_inputs=enc_inputs,
+        mesh=mesh, shd=shd, return_cache=True,
+    )
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bd,dv->bv", h[:, -1], head).astype(jnp.float32)
+    return logits, caches
+
+
+def decode_step(
+    params: Params,
+    cfg: ModelConfig,
+    cache: dict,
+    tokens: jax.Array,  # (B, 1)
+    pos: jax.Array,  # scalar int32: write position / current length
+    *,
+    mesh=None,
+    shd: Sharder = identity_sharder,
+):
+    """One-token decode against the cache; returns (logits, new_cache)."""
+    B = tokens.shape[0]
+    h = params["embed"][tokens]
+    positions = jnp.full((B, 1), pos, dtype=jnp.int32)
+    new_cache: dict = {}
+
+    if cfg.is_ssm or cfg.is_hybrid:
+        ssm_c = cache["ssm"]
+
+        def body(hh, xs):
+            blk, norm, h_c, conv_c = xs
+            out, nc = ssm_decode_step(
+                rms_norm(hh, norm, cfg.norm_eps), blk,
+                {"h": h_c, "conv": conv_c}, cfg,
+            )
+            return hh + out, (nc["h"], nc["conv"])
+
+        if cfg.is_ssm:
+            h, (hs, convs) = jax.lax.scan(
+                body, h,
+                (params["blocks"], params["ssm_norms"],
+                 ssm_c["h"], ssm_c["conv"]),
+                unroll=runtime_flags.scan_unroll(),
+            )
+            new_cache = {"ssm": {"h": hs, "conv": convs}}
+        else:
+            k = cfg.shared_attn_every
+            n_groups = cfg.n_layers // k
+            grouped = jax.tree.map(
+                lambda x: x.reshape((n_groups, k) + x.shape[1:]),
+                params["blocks"],
+            )
+            norms = params["ssm_norms"].reshape(n_groups, k, -1)
+            g_ssm = jax.tree.map(
+                lambda x: x.reshape((n_groups, k) + x.shape[1:]), ssm_c
+            )
+            shared = params["shared_attn"]
+            attn_c = cache["shared_attn"]
+
+            def group_body(hh, xs):
+                blks, ns, hcs, convcs, ck, cv = xs
+                hh, (nh, nconv) = jax.lax.scan(
+                    body, hh, (blks, ns, hcs, convcs),
+                    unroll=runtime_flags.scan_unroll(),
+                )
+                out, nc = _attn_block(
+                    hh, shared, cfg, positions=positions, window=None,
+                    mesh=mesh, shd=shd, moe=False,
+                    cache={"k": ck, "v": cv}, cache_pos=pos,
+                )
+                return out, (nh, nconv, nc["k"], nc["v"])
+
+            h, (hs, convs, cks, cvs) = jax.lax.scan(
+                group_body, h,
+                (grouped, norms, g_ssm["h"], g_ssm["conv"],
+                 attn_c["k"], attn_c["v"]),
+                unroll=runtime_flags.scan_unroll(),
+            )
+            new_cache = {
+                "ssm": {
+                    "h": hs.reshape((-1,) + hs.shape[2:]),
+                    "conv": convs.reshape((-1,) + convs.shape[2:]),
+                },
+                "shared_attn": {"k": cks, "v": cvs},
+            }
+    else:
+        def mk_body(moe: bool):
+            def body(hh, xs):
+                if cfg.mla:
+                    blk, w, ckv, krope = xs
+                    c = {"c_kv": ckv, "k_rope": krope}
+                else:
+                    blk, w, ck, cv = xs
+                    c = {"k": ck, "v": cv}
+                out, nc = _attn_block(
+                    hh, blk, cfg, positions=positions, window=w,
+                    mesh=mesh, shd=shd, moe=moe, cache=c, cache_pos=pos,
+                )
+                return out, tuple(nc.values())
+
+            return body
+
+        def run_stack(name, blocks, n_layers, moe):
+            nonlocal h
+            wins = _windows_arr(cfg, n_layers)
+            c = cache[name]
+            if cfg.is_encdec:
+                c = c["self"]
+            leaves = (
+                (c["c_kv"], c["k_rope"]) if cfg.mla else (c["k"], c["v"])
+            )
+            if cfg.is_encdec:
+                xc = cache["blocks"]["cross"]
+
+                def body_ed(hh, xs):
+                    blk, xblk, w, ck, cv, xk, xv = xs
+                    out, nc = _attn_block(
+                        hh, blk, cfg, positions=positions, window=w,
+                        mesh=mesh, shd=shd, moe=False,
+                        cache={"k": ck, "v": cv}, cache_pos=pos,
+                    )
+                    xx = rms_norm(out, xblk["lnx"], cfg.norm_eps)
+                    q = jnp.einsum("bsd,dh->bsh", xx, xblk["attn"]["wq"])
+                    if cfg.qkv_bias:
+                        q = q + xblk["attn"]["bq"]
+                    hd = cfg.resolved_head_dim
+                    q = q.reshape(B, 1, cfg.n_heads, hd).transpose(0, 2, 1, 3)
+                    from .attention import sdpa
+
+                    att = sdpa(
+                        q, xk, xv,
+                        jnp.full((B, 1), xk.shape[2], jnp.int32),
+                        None, causal=False,
+                    )
+                    att = att.transpose(0, 2, 1, 3).reshape(B, 1, -1)
+                    xout = jnp.einsum(
+                        "bsh,hd->bsd", att, xblk["attn"]["wo"]
+                    )
+                    return out + xout, (nc["k"], nc["v"])
+
+                h, ncs = jax.lax.scan(
+                    body_ed, h,
+                    (blocks, params["xattn"], wins, *leaves,
+                     xc["k"], xc["v"]),
+                    unroll=runtime_flags.scan_unroll(),
+                )
+                new_cache[name] = {
+                    "self": {"k": ncs[0], "v": ncs[1]},
+                    "cross": xc,
+                }
+            else:
+                h, ncs = jax.lax.scan(
+                    mk_body(moe), h, (blocks, wins, *leaves),
+                    unroll=runtime_flags.scan_unroll(),
+                )
+                if cfg.mla:
+                    new_cache[name] = {"c_kv": ncs[0], "k_rope": ncs[1]}
+                else:
+                    new_cache[name] = {"k": ncs[0], "v": ncs[1]}
+
+        if "blocks_dense" in params:
+            run_stack(
+                "dense", params["blocks_dense"], cfg.moe.first_k_dense, False
+            )
+            run_stack(
+                "blocks", params["blocks"],
+                cfg.n_layers - cfg.moe.first_k_dense, True,
+            )
+        else:
+            run_stack("blocks", params["blocks"], cfg.n_layers,
+                      cfg.moe is not None)
+
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,dv->bsv", h, head)[:, 0].astype(jnp.float32)
+    return logits, new_cache

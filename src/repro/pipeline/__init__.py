@@ -1,0 +1,23 @@
+# Executable data-flow substrate: the paper's flows as real JAX programs.
+#
+# * ops.py        — operator library over batched record tensors
+# * compile.py    — Flow/plan -> executable pipeline (staged-compacting host
+#                   executor for wall-clock validation; fused masked jit for
+#                   accelerator feeding)
+# * stats.py      — online cost/selectivity estimation (EMA) -> core.Flow
+# * adaptive.py   — drift-triggered re-optimization controller
+# * case_study.py — the PDI/Kettle analytic flow of paper §3, executable
+# * loader.py     — LM training input pipeline built on the same machinery
+from .ops import PipelineOp, derive_constraints
+from .compile import HostExecutor, FusedExecutor
+from .stats import FlowStats
+from .adaptive import AdaptivePipeline
+
+__all__ = [
+    "PipelineOp",
+    "derive_constraints",
+    "HostExecutor",
+    "FusedExecutor",
+    "FlowStats",
+    "AdaptivePipeline",
+]

@@ -1,0 +1,101 @@
+"""Drift-triggered plan re-optimization.
+
+Wraps an executor with the paper's optimizer: every ``reoptimize_every``
+batches the live ``FlowStats`` are turned into a ``core.Flow`` and the chosen
+algorithm (RO-III by default; ``portfolio`` uses the device-batched search)
+proposes a plan.  We switch only when the predicted SCM improvement exceeds
+``switch_threshold`` — plan churn has a (small) recompile cost in the fused
+path, so tiny predicted gains are ignored.
+
+The controller's state (stats EMAs + current plan) is checkpointable, so a
+restarted trainer resumes with its learned pipeline plan instead of
+re-learning costs from priors (see distributed.checkpoint).
+"""
+from __future__ import annotations
+
+from typing import Callable, Sequence
+
+import numpy as np
+
+from ..core.cost import scm
+from ..core.flow import Flow
+from ..core.rank import ro3
+from .compile import FusedExecutor, HostExecutor
+from .ops import PipelineOp
+from .stats import FlowStats
+
+__all__ = ["AdaptivePipeline"]
+
+Optimizer = Callable[[Flow], tuple[list[int], float]]
+
+
+def _portfolio(flow: Flow) -> tuple[list[int], float]:
+    from ..core.vectorized import portfolio_search
+
+    return portfolio_search(flow)
+
+
+_OPTIMIZERS: dict[str, Optimizer] = {
+    "ro3": ro3,
+    "portfolio": _portfolio,
+}
+
+
+class AdaptivePipeline:
+    def __init__(
+        self,
+        ops: Sequence[PipelineOp],
+        optimizer: str | Optimizer = "ro3",
+        reoptimize_every: int = 16,
+        switch_threshold: float = 0.02,
+        extra_edges: Sequence[tuple[int, int]] = (),
+        fused: bool = False,
+    ):
+        self.ops = list(ops)
+        self.stats = FlowStats(self.ops, extra_edges=extra_edges)
+        self.optimizer = (
+            _OPTIMIZERS[optimizer] if isinstance(optimizer, str) else optimizer
+        )
+        self.reoptimize_every = reoptimize_every
+        self.switch_threshold = switch_threshold
+        self.fused = fused
+        self.host_exec = HostExecutor(self.ops, stats=self.stats)
+        self.fused_exec = FusedExecutor(self.ops)
+        flow = self.stats.to_flow()
+        self.plan: list[int] = flow.topological_order()
+        self.batches_seen = 0
+        self.plan_history: list[tuple[int, list[int], float]] = []
+
+    # ----------------------------------------------------------------- run
+    def run(self, fields: dict[str, np.ndarray]):
+        if self.fused:
+            out = self.fused_exec.run(fields, self.plan)
+        else:
+            out = self.host_exec.run(fields, self.plan)
+        self.batches_seen += 1
+        if self.batches_seen % self.reoptimize_every == 0:
+            self.maybe_reoptimize()
+        return out
+
+    def maybe_reoptimize(self) -> bool:
+        flow = self.stats.to_flow()
+        current = scm(flow, self.plan)
+        proposed, cost = self.optimizer(flow)
+        if cost < current * (1.0 - self.switch_threshold):
+            self.plan = proposed
+            self.plan_history.append((self.batches_seen, list(proposed), cost))
+            return True
+        return False
+
+    # ----------------------------------------------------- fault tolerance
+    def state_dict(self) -> dict:
+        return {
+            "stats": self.stats.state_dict(),
+            "plan": np.array(self.plan, dtype=np.int64),
+            "batches_seen": np.array(self.batches_seen, dtype=np.int64),
+        }
+
+    def load_state_dict(self, state: dict) -> None:
+        self.stats.load_state_dict(state["stats"])
+        self.plan = [int(v) for v in state["plan"]]
+        self.batches_seen = int(state["batches_seen"])

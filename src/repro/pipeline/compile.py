@@ -1,0 +1,97 @@
+"""Plan -> executable pipeline.
+
+Two executors share the same ops and plans:
+
+* ``HostExecutor`` — staged, *compacting*: after every filter the surviving
+  rows are gathered to the front and the arrays shrink, so downstream cost
+  genuinely scales with volume.  This is the record-at-a-time-engine
+  analogue (PDI in the paper) and is what validates SCM predictions against
+  measured wall-clock.  Runs ops eagerly (no jit) so per-op timing is not
+  polluted by per-shape recompilation.
+* ``FusedExecutor`` — one jitted function with static shapes and a running
+  validity mask (what an accelerator input pipeline wants).  Filters AND
+  into the mask; sorts push invalid rows to the end; group-reduces weight by
+  the mask.  Reordering changes which filters run before the expensive ops,
+  which matters on TPU through the block-early-exit filter_chain kernel
+  (see repro.kernels) and through XLA dead-masked-lane algebra.
+"""
+from __future__ import annotations
+
+import time
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .ops import PipelineOp
+from .stats import FlowStats
+
+__all__ = ["HostExecutor", "FusedExecutor"]
+
+
+class HostExecutor:
+    """Execute a plan op-by-op with host-side compaction and stats capture."""
+
+    def __init__(self, ops: Sequence[PipelineOp], stats: FlowStats | None = None):
+        self.ops = list(ops)
+        self.stats = stats if stats is not None else FlowStats(self.ops)
+
+    def run(
+        self, fields: dict[str, np.ndarray], order: Sequence[int]
+    ) -> dict[str, np.ndarray]:
+        fields = {k: jnp.asarray(v) for k, v in fields.items()}
+        for i in order:
+            op = self.ops[i]
+            n_in = int(next(iter(fields.values())).shape[0])
+            if n_in == 0:
+                self.stats.observe(i, rows_in=0, rows_out=0, seconds=0.0)
+                continue
+            t0 = time.perf_counter()
+            delta, keep = op.fn(fields)
+            if delta:
+                fields = {**fields, **delta}
+            if keep is not None:
+                keep = np.asarray(keep)
+                idx = np.nonzero(keep)[0]
+                fields = {k: jnp.asarray(np.asarray(v)[idx]) for k, v in fields.items()}
+            jax.block_until_ready(list(fields.values()))
+            dt = time.perf_counter() - t0
+            n_out = int(next(iter(fields.values())).shape[0])
+            self.stats.observe(i, rows_in=n_in, rows_out=n_out, seconds=dt)
+        return {k: np.asarray(v) for k, v in fields.items()}
+
+
+class FusedExecutor:
+    """Compile a plan into a single jitted masked function."""
+
+    def __init__(self, ops: Sequence[PipelineOp]):
+        self.ops = list(ops)
+        self._cache: dict[tuple[int, ...], callable] = {}
+
+    def _build(self, order: tuple[int, ...]):
+        ops = self.ops
+
+        def pipeline(fields: dict[str, jax.Array]):
+            n = next(iter(fields.values())).shape[0]
+            fields = dict(fields)
+            # ops are mask-aware through the reserved "_mask" field: sorts
+            # permute it (validity-major key), group-reduces weight by it.
+            fields["_mask"] = jnp.ones((n,), dtype=bool)
+            for i in order:
+                op = ops[i]
+                delta, keep = op.fn(fields)
+                if delta:
+                    fields = {**fields, **delta}
+                if keep is not None:
+                    fields["_mask"] = fields["_mask"] & keep
+            mask = fields.pop("_mask")
+            return fields, mask
+
+        return jax.jit(pipeline)
+
+    def run(self, fields: dict[str, jax.Array], order: Sequence[int]):
+        key = tuple(int(i) for i in order)
+        if key not in self._cache:
+            self._cache[key] = self._build(key)
+        return self._cache[key](fields)

@@ -1,0 +1,249 @@
+"""Operator library for executable data flows.
+
+A *record batch* is a dict of equal-leading-dim arrays.  An op is a pure
+function ``fields -> (fields_delta, keep_mask | None)``:
+
+* transform ops return new/updated field arrays and ``None`` (sel == 1);
+* filter ops return ``{}`` and a boolean keep mask (sel < 1);
+* expanding ops (sel > 1) return replicated fields and an integer expansion
+  factor via a full replacement dict (rare; modeled for completeness).
+
+Precedence constraints are *derived from data dependencies* — op B depends on
+op A iff B reads a field A writes (or both write the same field).  This is
+the executable analogue of the paper's PC graph and is how a real engine
+would guarantee that re-ordering never changes results.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["PipelineOp", "derive_constraints"]
+
+Fields = dict[str, jax.Array]
+
+
+@dataclasses.dataclass(frozen=True)
+class PipelineOp:
+    """One data-flow task with declared dependencies and cost metadata."""
+
+    name: str
+    fn: Callable[[Fields], tuple[Fields, jax.Array | None]]
+    reads: frozenset[str]
+    writes: frozenset[str]
+    est_cost: float = 1.0  # prior cost per input row (arbitrary units)
+    est_sel: float = 1.0  # prior selectivity
+    is_filter: bool = False
+
+    def __post_init__(self):
+        object.__setattr__(self, "reads", frozenset(self.reads))
+        object.__setattr__(self, "writes", frozenset(self.writes))
+
+
+def derive_constraints(ops: list[PipelineOp]) -> tuple[tuple[int, int], ...]:
+    """PC edges from read/write dependencies, in the ops' authored order.
+
+    Edges: write->read (B reads what A writes), write->write (same field;
+    keep authored order), and read->write (B overwrites what A reads —
+    anti-dependency; keeps authored order deterministic).
+    """
+    edges: set[tuple[int, int]] = set()
+    n = len(ops)
+    for j in range(n):
+        for i in range(j):
+            a, b = ops[i], ops[j]
+            if (
+                (a.writes & b.reads)
+                or (a.writes & b.writes)
+                or (a.reads & b.writes)
+            ):
+                edges.add((i, j))
+    return tuple(sorted(edges))
+
+
+# --------------------------------------------------------------------------
+# Concrete operator builders (used by the case study, the LM loader and the
+# synthetic benchmarks).  All are pure jnp; integer "text" stand-ins keep the
+# pipeline fully on-device-capable while exercising realistic compute mixes.
+# --------------------------------------------------------------------------
+def _hash_mix(x: jax.Array, rounds: int = 4) -> jax.Array:
+    """A cheap integer mixer (xorshift-multiply) used as a 'text analysis'
+    compute stand-in; ``rounds`` scales its cost."""
+    y = x.astype(jnp.uint32)
+    for r in range(rounds):
+        y = y ^ (y >> 13)
+        y = y * jnp.uint32(0x5BD1E995 + 2 * r)  # keep the multiplier odd
+        y = y ^ (y << 7)
+    return y
+
+
+def map_op(
+    name: str,
+    read: str,
+    write: str,
+    rounds: int = 4,
+    est_cost: float = 1.0,
+    scale: float | None = None,
+    modulo: int | None = None,
+) -> PipelineOp:
+    """Generic compute transform: write = f(read) with tunable compute.
+
+    Writes float in [0, scale) when ``scale`` is given, else int32 (reduced
+    modulo ``modulo`` when given — e.g. a date bucket)."""
+
+    def fn(fields: Fields):
+        h = _hash_mix(fields[read], rounds=rounds)
+        if scale is not None:
+            val = (h.astype(jnp.float32) / jnp.float32(2**32)) * scale
+        else:
+            val = (h % (modulo or 2**20)).astype(jnp.int32)
+        return {write: val}, None
+
+    return PipelineOp(name, fn, {read}, {write}, est_cost=est_cost)
+
+
+def lookup_op(
+    name: str,
+    read: str,
+    write: str,
+    table_size: int,
+    rounds: int = 2,
+    est_cost: float = 2.0,
+) -> PipelineOp:
+    """Hash-lookup into a static table of ``table_size`` rows (gather)."""
+    key = jax.random.PRNGKey(hash(name) % (2**31))
+    table = jax.random.randint(key, (table_size,), 0, 2**20, dtype=jnp.int32)
+
+    def fn(fields: Fields):
+        idx = (_hash_mix(fields[read], rounds=rounds) % table_size).astype(
+            jnp.int32
+        )
+        return {write: table[idx]}, None
+
+    return PipelineOp(name, fn, {read}, {write}, est_cost=est_cost)
+
+
+def multi_lookup_op(
+    name: str,
+    reads: tuple[str, ...],
+    write: str,
+    table_size: int,
+    rounds: int = 2,
+    est_cost: float = 2.0,
+) -> PipelineOp:
+    """Hash-lookup keyed on several fields combined (paper's Sales/Campaign
+    lookups are keyed on region x product x date)."""
+    key = jax.random.PRNGKey(hash(name) % (2**31))
+    table = jax.random.randint(key, (table_size,), 0, 2**20, dtype=jnp.int32)
+
+    def fn(fields: Fields):
+        h = _hash_mix(fields[reads[0]], rounds=rounds)
+        for r in reads[1:]:
+            h = _hash_mix(h.astype(jnp.int32) ^ fields[r].astype(jnp.int32), rounds=1)
+        idx = (h % table_size).astype(jnp.int32)
+        return {write: table[idx]}, None
+
+    return PipelineOp(name, fn, set(reads), {write}, est_cost=est_cost)
+
+
+def ingest_op(name: str, fields_out: tuple[str, ...], est_cost: float = 1.0) -> PipelineOp:
+    """Source task: normalizes/claims ownership of the raw input fields so
+    every downstream consumer is constrained after it (paper: the source
+    precedes every task in a SISO flow)."""
+
+    def fn(fields: Fields):
+        return {k: fields[k] for k in fields_out}, None
+
+    return PipelineOp(
+        name, fn, set(fields_out), set(fields_out), est_cost=est_cost
+    )
+
+
+def range_filter_op(
+    name: str,
+    read: str,
+    keep_fraction: float,
+    est_cost: float = 0.5,
+) -> PipelineOp:
+    """Keep rows whose hashed key falls in the lowest ``keep_fraction``."""
+    threshold = jnp.uint32(int(keep_fraction * (2**32 - 1)))
+
+    def fn(fields: Fields):
+        h = _hash_mix(fields[read], rounds=1)
+        return {}, h <= threshold
+
+    return PipelineOp(
+        name, fn, {read}, set(), est_cost=est_cost, est_sel=keep_fraction,
+        is_filter=True,
+    )
+
+
+def sort_op(
+    name: str, keys: tuple[str, ...], est_cost: float = 20.0
+) -> PipelineOp:
+    """Stable sort of the whole batch by composite key; writes a pseudo-field
+    '<name>.sorted' that downstream group ops read (ordering constraint)."""
+    marker = f"{name}.sorted"
+
+    def fn(fields: Fields):
+        ks = [fields[k] for k in reversed(keys)]  # lexsort: last = primary
+        if "_mask" in fields:  # fused path: sink invalid rows to the end
+            ks = ks + [~fields["_mask"]]
+        perm = jnp.lexsort(tuple(ks))
+        out = {k: v[perm] for k, v in fields.items()}
+        out[marker] = jnp.arange(perm.shape[0], dtype=jnp.int32)
+        return out, None
+
+    return PipelineOp(
+        name,
+        fn,
+        set(keys),
+        {marker},  # record-*set* semantics: per-record ops commute with the
+        # permutation, so only order-sensitive consumers depend on the marker
+        est_cost=est_cost,
+    )
+
+
+def group_reduce_op(
+    name: str,
+    sorted_marker: str,
+    group_keys: tuple[str, ...],
+    value: str,
+    write: str,
+    est_sel: float = 0.1,
+    est_cost: float = 5.0,
+) -> PipelineOp:
+    """Average ``value`` per group (requires sorted input); keeps the first
+    row of each group — a selective aggregation (paper's SentimentAvg)."""
+
+    def fn(fields: Fields):
+        v = fields[value].astype(jnp.float32)
+        valid = fields.get("_mask")
+        w = jnp.ones_like(v) if valid is None else valid.astype(jnp.float32)
+        # segment boundaries on sorted data (invalid rows are sunk last by
+        # the mask-aware sort, so they form trailing junk groups that the
+        # returned keep-mask removes); multi-key boundary = any key changed
+        diff = jnp.zeros(v.shape[0] - 1, dtype=bool)
+        for k in group_keys:
+            g = fields[k]
+            diff = diff | (g[1:] != g[:-1])
+        first = jnp.concatenate([jnp.ones((1,), bool), diff], axis=0)
+        seg_id = jnp.cumsum(first.astype(jnp.int32)) - 1
+        n = v.shape[0]
+        sums = jnp.zeros((n,), jnp.float32).at[seg_id].add(v * w)
+        cnts = jnp.zeros((n,), jnp.float32).at[seg_id].add(w)
+        mean = sums[seg_id] / jnp.maximum(cnts[seg_id], 1.0)
+        return {write: mean}, first
+
+    return PipelineOp(
+        name,
+        fn,
+        {sorted_marker, value} | set(group_keys),
+        {write},
+        est_cost=est_cost,
+        est_sel=est_sel,
+        is_filter=True,
+    )

@@ -1,0 +1,72 @@
+"""Online cost/selectivity estimation for executable flows.
+
+The paper assumes ``c_i`` and ``sel_i`` are known metadata.  In a running
+system they drift with the data (paper §1: a plan optimal for one data set
+may be significantly suboptimal for another), so we estimate both online
+with exponential moving averages and rebuild the optimizer's ``Flow`` from
+the live estimates.  Priors come from the ops' ``est_cost``/``est_sel``.
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import numpy as np
+
+from ..core.flow import Flow
+from .ops import PipelineOp, derive_constraints
+
+__all__ = ["FlowStats"]
+
+
+class FlowStats:
+    def __init__(
+        self,
+        ops: Sequence[PipelineOp],
+        decay: float = 0.8,
+        extra_edges: Sequence[tuple[int, int]] = (),
+    ):
+        self.ops = list(ops)
+        self.decay = decay
+        n = len(self.ops)
+        self.cost = np.array([op.est_cost for op in self.ops], dtype=np.float64)
+        self.sel = np.array([op.est_sel for op in self.ops], dtype=np.float64)
+        self.samples = np.zeros(n, dtype=np.int64)
+        self.edges = tuple(
+            sorted(set(derive_constraints(self.ops)) | set(extra_edges))
+        )
+
+    def observe(self, i: int, rows_in: int, rows_out: int, seconds: float) -> None:
+        if rows_in <= 0:
+            return
+        c = seconds / rows_in
+        s = max(rows_out / rows_in, 1e-6)
+        if self.samples[i] == 0:
+            # first real sample replaces the prior scale entirely for cost
+            # (priors are unitless; measurements are seconds/row)
+            self.cost[i] = c
+            self.sel[i] = s
+        else:
+            d = self.decay
+            self.cost[i] = d * self.cost[i] + (1 - d) * c
+            self.sel[i] = d * self.sel[i] + (1 - d) * s
+        self.samples[i] += 1
+
+    def to_flow(self) -> Flow:
+        return Flow(
+            cost=self.cost.copy(),
+            sel=self.sel.copy(),
+            edges=self.edges,
+            names=tuple(op.name for op in self.ops),
+        )
+
+    def state_dict(self) -> dict:
+        return {
+            "cost": self.cost.copy(),
+            "sel": self.sel.copy(),
+            "samples": self.samples.copy(),
+        }
+
+    def load_state_dict(self, state: dict) -> None:
+        self.cost[:] = state["cost"]
+        self.sel[:] = state["sel"]
+        self.samples[:] = state["samples"]

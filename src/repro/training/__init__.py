@@ -1,0 +1,11 @@
+from .optimizers import adafactor, adamw, clip_by_global_norm
+from .schedules import cosine_with_warmup
+from .train_step import make_train_step
+
+__all__ = [
+    "adamw",
+    "adafactor",
+    "clip_by_global_norm",
+    "cosine_with_warmup",
+    "make_train_step",
+]

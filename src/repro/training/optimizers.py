@@ -1,0 +1,159 @@
+"""Optimizers in raw JAX pytree form.
+
+* ``adamw`` — f32 moments regardless of param dtype (bf16-safe).
+* ``adafactor`` — factored second moments for >=2-D params: state is
+  O(rows + cols) instead of O(rows * cols).  This is what makes the
+  deepseek-v3-671b configuration trainable on 512 v5e chips: Adam's f32
+  m+v would need ~5.4 TB; Adafactor's factored stats need ~gigabytes.
+* ``clip_by_global_norm`` — standard pre-optimizer clip.
+
+An optimizer is a pair of pure functions:
+    init(params) -> state
+    update(grads, state, params, step) -> (new_params, new_state)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+Schedule = Callable
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable
+    update: Callable
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree.leaves(grads)
+    gn = jnp.sqrt(
+        sum(jnp.sum(g.astype(jnp.float32) ** 2) for g in leaves)
+    )
+    scale = jnp.minimum(1.0, max_norm / (gn + 1e-9))
+    return jax.tree.map(lambda g: (g * scale).astype(g.dtype), grads), gn
+
+
+def adamw(
+    lr: float | Schedule,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+    clip_norm: float | None = 1.0,
+) -> Optimizer:
+    sched = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {
+            "m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params),
+        }
+
+    def update(grads, state, params, step):
+        if clip_norm is not None:
+            grads, gnorm = clip_by_global_norm(grads, clip_norm)
+        else:
+            _, gnorm = clip_by_global_norm(grads, jnp.inf)
+        step_f = jnp.asarray(step, jnp.float32) + 1.0
+        lr_t = sched(step)
+
+        def upd(g, m, v, p):
+            gf = g.astype(jnp.float32)
+            m = b1 * m + (1 - b1) * gf
+            v = b2 * v + (1 - b2) * gf * gf
+            mhat = m / (1 - b1**step_f)
+            vhat = v / (1 - b2**step_f)
+            delta = mhat / (jnp.sqrt(vhat) + eps)
+            if weight_decay:
+                delta = delta + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr_t * delta).astype(p.dtype), m, v
+
+        flat_p, tree = jax.tree.flatten(params)
+        flat_g = jax.tree.leaves(grads)
+        flat_m = jax.tree.leaves(state["m"])
+        flat_v = jax.tree.leaves(state["v"])
+        out = [upd(g, m, v, p) for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+        new_p = tree.unflatten([o[0] for o in out])
+        new_m = tree.unflatten([o[1] for o in out])
+        new_v = tree.unflatten([o[2] for o in out])
+        return new_p, {"m": new_m, "v": new_v}, {"grad_norm": gnorm, "lr": lr_t}
+
+    return Optimizer(init, update)
+
+
+def adafactor(
+    lr: float | Schedule,
+    decay: float = 0.8,
+    eps: float = 1e-30,
+    clip_threshold: float = 1.0,
+    weight_decay: float = 0.0,
+    min_dim_size_to_factor: int = 128,
+) -> Optimizer:
+    """Adafactor (Shazeer & Stern 2018), factored second moments, no
+    first moment — the memory-frugal choice for very large models."""
+    sched = lr if callable(lr) else (lambda _: lr)
+
+    def factored(p) -> bool:
+        return (
+            p.ndim >= 2
+            and p.shape[-1] >= min_dim_size_to_factor
+            and p.shape[-2] >= min_dim_size_to_factor
+        )
+
+    def init(params):
+        def one(p):
+            if factored(p):
+                return {
+                    "vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+                }
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+
+        return jax.tree.map(
+            one, params, is_leaf=lambda x: isinstance(x, jax.Array)
+        )
+
+    def update(grads, state, params, step):
+        step_f = jnp.asarray(step, jnp.float32) + 1.0
+        beta = 1.0 - step_f**-decay  # increasing decay schedule
+        lr_t = sched(step)
+
+        def upd(g, s, p):
+            gf = g.astype(jnp.float32)
+            g2 = gf * gf + eps
+            if "vr" in s:
+                vr = beta * s["vr"] + (1 - beta) * jnp.mean(g2, axis=-1)
+                vc = beta * s["vc"] + (1 - beta) * jnp.mean(g2, axis=-2)
+                denom = jnp.mean(vr, axis=-1, keepdims=True)
+                rfac = (vr / jnp.maximum(denom, eps))[..., None]
+                u = gf * jax.lax.rsqrt(jnp.maximum(rfac * vc[..., None, :], eps))
+                ns = {"vr": vr, "vc": vc}
+            else:
+                v = beta * s["v"] + (1 - beta) * g2
+                u = gf * jax.lax.rsqrt(jnp.maximum(v, eps))
+                ns = {"v": v}
+            # update clipping by RMS
+            rms = jnp.sqrt(jnp.mean(u * u) + 1e-30)
+            u = u / jnp.maximum(1.0, rms / clip_threshold)
+            pf = p.astype(jnp.float32)
+            if weight_decay:
+                u = u + weight_decay * pf
+            return (pf - lr_t * u).astype(p.dtype), ns
+
+        flat_p, tree = jax.tree.flatten(params)
+        flat_g = jax.tree.leaves(grads)
+        flat_s = jax.tree.flatten(
+            state, is_leaf=lambda x: isinstance(x, dict) and ("v" in x or "vr" in x)
+        )[0]
+        out = [upd(g, s, p) for g, s, p in zip(flat_g, flat_s, flat_p)]
+        new_p = tree.unflatten([o[0] for o in out])
+        new_s = tree.unflatten([o[1] for o in out])
+        _, gnorm = clip_by_global_norm(grads, jnp.inf)
+        return new_p, new_s, {"grad_norm": gnorm, "lr": lr_t}
+
+    return Optimizer(init, update)

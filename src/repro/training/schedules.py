@@ -1,0 +1,23 @@
+"""Learning-rate schedules (pure functions of the step)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cosine_with_warmup(
+    peak: float,
+    warmup_steps: int,
+    total_steps: int,
+    floor: float = 0.0,
+):
+    def schedule(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak * step / jnp.maximum(warmup_steps, 1)
+        t = (step - warmup_steps) / jnp.maximum(
+            total_steps - warmup_steps, 1
+        )
+        t = jnp.clip(t, 0.0, 1.0)
+        cos = floor + (peak - floor) * 0.5 * (1.0 + jnp.cos(jnp.pi * t))
+        return jnp.where(step < warmup_steps, warm, cos)
+
+    return schedule

@@ -1,0 +1,68 @@
+"""Jittable training step with gradient accumulation.
+
+``make_train_step`` closes over the config/optimizer and returns a pure
+``(params, opt_state, batch, step) -> (params, opt_state, metrics)``
+function suitable for jax.jit with in/out shardings.  Gradient accumulation
+runs microbatches through a lax.scan (activation memory bounded by one
+microbatch; remat inside the model bounds it further to one layer).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..models import transformer as T
+from ..models.config import ModelConfig
+from ..models.layers import Sharder, identity_sharder
+from .optimizers import Optimizer
+
+
+def make_train_step(
+    cfg: ModelConfig,
+    optimizer: Optimizer,
+    accum_steps: int = 1,
+    mesh=None,
+    shd: Sharder = identity_sharder,
+):
+    def loss(params, micro):
+        return T.loss_fn(params, cfg, micro, mesh=mesh, shd=shd)
+
+    grad_fn = jax.value_and_grad(loss)
+
+    def train_step(params, opt_state, batch: dict[str, Any], step):
+        if accum_steps == 1:
+            l, grads = grad_fn(params, batch)
+        else:
+            def split(x):
+                return x.reshape((accum_steps, x.shape[0] // accum_steps) + x.shape[1:])
+
+            micro = jax.tree.map(split, batch)
+            zero = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params
+            )
+
+            def body(carry, mb):
+                acc, ltot = carry
+                l, g = grad_fn(params, mb)
+                acc = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), acc, g
+                )
+                return (acc, ltot + l), None
+
+            (gsum, lsum), _ = jax.lax.scan(
+                body, (zero, jnp.float32(0.0)), micro
+            )
+            grads = jax.tree.map(
+                lambda g, p: (g / accum_steps).astype(p.dtype), gsum, params
+            )
+            l = lsum / accum_steps
+        new_params, new_state, om = optimizer.update(
+            grads, opt_state, params, step
+        )
+        metrics = {"loss": l, **om}
+        return new_params, new_state, metrics
+
+    return train_step

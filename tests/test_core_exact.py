@@ -1,0 +1,66 @@
+"""Exact optimizers (paper §4): mutual agreement + optimality."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    Flow, backtracking, dp, random_flow, scm, topsort,
+)
+
+
+@given(
+    n=st.integers(4, 9),
+    pc=st.floats(0.1, 0.9),
+    seed=st.integers(0, 10_000),
+)
+@settings(max_examples=40, deadline=None)
+def test_exact_algorithms_agree(n, pc, seed):
+    f = random_flow(n, pc, rng=seed)
+    p1, c1 = backtracking(f)
+    p2, c2 = dp(f)
+    p3, c3 = topsort(f)
+    assert f.is_valid_order(p1)
+    assert f.is_valid_order(p2)
+    assert f.is_valid_order(p3)
+    assert c1 == pytest.approx(c2, rel=1e-9)
+    assert c1 == pytest.approx(c3, rel=1e-9)
+
+
+@given(
+    n=st.integers(4, 8),
+    pc=st.floats(0.2, 0.9),
+    seed=st.integers(0, 10_000),
+)
+@settings(max_examples=30, deadline=None)
+def test_exact_is_minimum_over_all_valid_orders(n, pc, seed):
+    import itertools
+
+    f = random_flow(n, pc, rng=seed)
+    _, copt = dp(f)
+    best = min(
+        scm(f, p)
+        for p in itertools.permutations(range(n))
+        if f.is_valid_order(list(p))
+    )
+    assert copt == pytest.approx(best, rel=1e-9)
+
+
+def test_backtracking_prune_preserves_exactness():
+    for seed in range(10):
+        f = random_flow(8, 0.3, rng=seed)
+        _, c1 = backtracking(f, prune=False)
+        _, c2 = backtracking(f, prune=True)
+        assert c1 == pytest.approx(c2, rel=1e-12)
+
+
+def test_dp_rejects_oversize():
+    f = random_flow(25, 0.5, rng=0)
+    with pytest.raises(ValueError):
+        dp(f)
+
+
+def test_flow_validation():
+    with pytest.raises(ValueError):  # cycle
+        Flow(np.ones(3), np.ones(3), ((0, 1), (1, 2), (2, 0)))
+    with pytest.raises(ValueError):  # non-positive selectivity
+        Flow(np.ones(2), np.array([1.0, 0.0]), ())

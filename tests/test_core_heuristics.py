@@ -1,0 +1,136 @@
+"""Approximate optimizers (paper §5): validity, improvement, delta math."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    PrefixState, dp, greedy1, greedy2, kbz, partition, random_flow,
+    random_plan, ro1, ro2, ro3, scm, swap,
+)
+from repro.core.rank import block_move_pass
+
+ALGOS = {
+    "swap": lambda f: swap(f, rng=0),
+    "greedy1": greedy1,
+    "greedy2": greedy2,
+    "partition": partition,
+    "ro1": ro1,
+    "ro2": ro2,
+    "ro3": ro3,
+}
+
+
+@given(
+    n=st.integers(4, 24),
+    pc=st.floats(0.1, 0.95),
+    seed=st.integers(0, 10_000),
+)
+@settings(max_examples=40, deadline=None)
+def test_heuristics_produce_valid_plans(n, pc, seed):
+    f = random_flow(n, pc, rng=seed)
+    for name, fn in ALGOS.items():
+        order, cost = fn(f)
+        assert f.is_valid_order(order), name
+        assert cost == pytest.approx(scm(f, order), rel=1e-9), name
+
+
+@given(seed=st.integers(0, 10_000))
+@settings(max_examples=25, deadline=None)
+def test_ro3_never_worse_than_ro2(seed):
+    f = random_flow(20, 0.4, rng=seed)
+    _, c2 = ro2(f)
+    _, c3 = ro3(f)
+    assert c3 <= c2 + 1e-9
+
+
+@given(seed=st.integers(0, 5_000))
+@settings(max_examples=20, deadline=None)
+def test_heuristics_vs_optimal_small(seed):
+    """Exactness anchors: every heuristic >= optimum; RO-III close."""
+    f = random_flow(9, 0.4, rng=seed)
+    _, copt = dp(f)
+    for name, fn in ALGOS.items():
+        _, c = fn(f)
+        assert c >= copt - 1e-9, name
+
+
+def test_swap_improves_over_initial():
+    for seed in range(20):
+        f = random_flow(15, 0.3, rng=seed)
+        init = random_plan(f, seed)
+        order, cost = swap(f, initial=list(init))
+        assert cost <= scm(f, init) + 1e-9
+
+
+def test_kbz_exact_on_tree_constraints():
+    """KBZ == DP when the PC reduction is a forest (chain here)."""
+    rng = np.random.default_rng(0)
+    for seed in range(10):
+        n = 9
+        f = random_flow(n, 0.0, rng=seed)
+        # build a random forest: each task's parent is an earlier task or none
+        edges = []
+        for v in range(1, n):
+            p = rng.integers(-1, v)
+            if p >= 0:
+                edges.append((int(p), v))
+        from repro.core import Flow
+
+        f2 = Flow(f.cost, f.sel, tuple(edges))
+        o1, c1 = kbz(f2)
+        _, c2 = dp(f2)
+        assert f2.is_valid_order(o1)
+        assert c1 == pytest.approx(c2, rel=1e-9)
+
+
+@given(
+    n=st.integers(5, 20),
+    seed=st.integers(0, 10_000),
+)
+@settings(max_examples=30, deadline=None)
+def test_prefix_state_block_move_delta(n, seed):
+    """O(1) block-move delta == recomputed difference (cost.py math)."""
+    rng = np.random.default_rng(seed)
+    f = random_flow(n, 0.3, rng=seed)
+    order = random_plan(f, seed)
+    st_ = PrefixState(f, order)
+    s = int(rng.integers(0, n - 1))
+    e = int(rng.integers(s + 1, min(s + 4, n) + 1))
+    e = min(e, n)
+    if e >= n:
+        e = n - 1 if s < n - 1 else n
+    if s >= e:
+        return
+    t = int(rng.integers(e, n + 1))
+    if t <= e:
+        return
+    delta = st_.block_move_delta(s, e, t)
+    new_order = order[:s] + order[e:t] + order[s:e] + order[t:]
+    assert delta == pytest.approx(
+        scm(f, new_order) - scm(f, order), rel=1e-9, abs=1e-9
+    )
+
+
+def test_block_move_pass_only_improves():
+    for seed in range(10):
+        f = random_flow(20, 0.3, rng=seed)
+        init = random_plan(f, seed)
+        out, cost = block_move_pass(f, list(init))
+        assert f.is_valid_order(out)
+        assert cost <= scm(f, init) + 1e-9
+
+
+def test_paper_swap_counterexample():
+    """§5.1.1: three tasks, cost 1, sel (1, 1.1, 0.5), PC t2->t3; Swap from
+    t1,t2,t3 cannot reach the optimum t2,t3,t1."""
+    from repro.core import Flow
+
+    f = Flow(
+        np.array([1.0, 1.0, 1.0]),
+        np.array([1.0, 1.1, 0.5]),
+        ((1, 2),),
+    )
+    _, c_swap = swap(f, initial=[0, 1, 2])
+    _, c_opt = dp(f)
+    assert c_opt == pytest.approx(2.65)
+    assert c_swap == pytest.approx(3.1)  # trapped at the initial plan

@@ -1,0 +1,49 @@
+"""Device-batched SCM evaluation + portfolio search (beyond-paper)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import random_flow, random_plan, ro3, scm
+from repro.core.vectorized import portfolio_search, scm_batch, valid_batch
+
+
+@given(
+    n=st.integers(4, 30),
+    seed=st.integers(0, 10_000),
+)
+@settings(max_examples=25, deadline=None)
+def test_scm_batch_matches_reference(n, seed):
+    f = random_flow(n, 0.3, rng=seed)
+    orders = np.array(
+        [random_plan(f, s) for s in range(6)], dtype=np.int32
+    )
+    got = np.asarray(
+        scm_batch(jnp.asarray(f.cost), jnp.asarray(f.sel), jnp.asarray(orders))
+    )
+    want = np.array([scm(f, o) for o in orders])
+    np.testing.assert_allclose(got, want, rtol=2e-5)
+
+
+def test_valid_batch():
+    f = random_flow(12, 0.5, rng=3)
+    pred = np.zeros((f.n, f.n), dtype=bool)
+    for v in range(f.n):
+        for p in f.preds(v):
+            pred[p, v] = True
+    good = np.array([random_plan(f, s) for s in range(4)], dtype=np.int32)
+    res = np.asarray(valid_batch(jnp.asarray(pred), jnp.asarray(good)))
+    assert res.all()
+    bad = good.copy()
+    bad[0] = bad[0][::-1]
+    res = np.asarray(valid_batch(jnp.asarray(pred), jnp.asarray(bad)))
+    assert not res[0]
+
+
+def test_portfolio_never_worse_than_seeds():
+    for seed in range(3):
+        f = random_flow(25, 0.4, rng=seed)
+        _, c3 = ro3(f)
+        order, c = portfolio_search(f, generations=4, population=64, seed=seed)
+        assert f.is_valid_order(order)
+        assert c <= c3 + 1e-9

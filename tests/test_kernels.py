@@ -1,0 +1,97 @@
+"""Pallas kernels vs pure-jnp oracles (interpret mode), shape/dtype sweeps."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.filter_chain import filter_chain
+from repro.kernels.flash_attention import flash_attention
+
+RNG = np.random.default_rng(0)
+
+
+@pytest.mark.parametrize("n", [100, 1024, 3000])
+@pytest.mark.parametrize("dtype", [np.float32, np.int32])
+@pytest.mark.parametrize("k", [1, 3, 6])
+def test_filter_chain_matches_ref(n, dtype, k):
+    F = 8
+    if dtype == np.float32:
+        x = RNG.uniform(-1, 1, size=(n, F)).astype(dtype)
+        lo = np.sort(RNG.uniform(-1, 0, size=(k, 1)), axis=0)[:, 0].astype(dtype)
+        hi = RNG.uniform(0, 1, size=(k,)).astype(dtype)
+    else:
+        x = RNG.integers(-100, 100, size=(n, F)).astype(dtype)
+        lo = RNG.integers(-80, 0, size=(k,)).astype(dtype)
+        hi = RNG.integers(0, 80, size=(k,)).astype(dtype)
+    feat = tuple(int(v) for v in RNG.integers(0, F, size=k))
+    got = filter_chain(
+        jnp.asarray(x), jnp.asarray(lo), jnp.asarray(hi), feat,
+        block_rows=256,
+    )
+    want = ref.filter_chain_ref(jnp.asarray(x), np.array(feat),
+                                jnp.asarray(lo), jnp.asarray(hi))
+    assert np.array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_filter_chain_order_invariant_result():
+    x = jnp.asarray(RNG.uniform(-1, 1, size=(2048, 4)).astype(np.float32))
+    lo = jnp.asarray(np.float32([-0.5, -0.2, -0.9]))
+    hi = jnp.asarray(np.float32([0.5, 0.9, 0.1]))
+    m1 = filter_chain(x, lo, hi, (0, 1, 2))
+    perm = jnp.array([2, 0, 1])
+    m2 = filter_chain(x, lo[perm], hi[perm], (2, 0, 1))
+    assert np.array_equal(np.asarray(m1), np.asarray(m2))
+
+
+SWEEP = [
+    # B, Hq, Hkv, S, T, D, causal, window, offset
+    (2, 4, 2, 256, 256, 64, True, None, 0),
+    (1, 8, 1, 128, 128, 128, True, None, 0),
+    (2, 4, 4, 256, 256, 64, False, None, 0),
+    (1, 4, 2, 256, 256, 64, True, 128, 0),
+    (1, 4, 2, 128, 384, 64, True, None, 256),
+    (1, 2, 1, 256, 256, 256, True, 64, 0),
+]
+
+
+@pytest.mark.parametrize("case", SWEEP, ids=[str(c) for c in SWEEP])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_matches_ref(case, dtype):
+    B, Hq, Hkv, S, T, D, causal, window, off = case
+    q = jnp.asarray(RNG.normal(size=(B, Hq, S, D)), dtype)
+    k = jnp.asarray(RNG.normal(size=(B, Hkv, T, D)), dtype)
+    v = jnp.asarray(RNG.normal(size=(B, Hkv, T, D)), dtype)
+    got = flash_attention(
+        q, k, v, causal=causal, window=window, q_offset=off
+    ).astype(jnp.float32)
+    want = ref.attention_ref(
+        q.astype(jnp.float32), k.astype(jnp.float32),
+        v.astype(jnp.float32), causal=causal, window=window, q_offset=off,
+    )
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    assert float(jnp.max(jnp.abs(got - want))) < tol
+
+
+def test_flash_block_shape_invariance():
+    q = jnp.asarray(RNG.normal(size=(1, 2, 512, 64)), jnp.float32)
+    k = jnp.asarray(RNG.normal(size=(1, 2, 512, 64)), jnp.float32)
+    v = jnp.asarray(RNG.normal(size=(1, 2, 512, 64)), jnp.float32)
+    o1 = flash_attention(q, k, v, block_q=128, block_k=128)
+    o2 = flash_attention(q, k, v, block_q=256, block_k=64)
+    assert float(jnp.max(jnp.abs(o1 - o2))) < 2e-5
+
+
+def test_ssd_chunked_matches_recurrent_ref():
+    from repro.models.ssm import _ssd_chunked
+
+    B, S, H, P, G, N = 2, 64, 4, 16, 2, 8
+    x = jnp.asarray(RNG.normal(size=(B, S, H, P)), jnp.float32)
+    dt = jnp.asarray(RNG.uniform(0.01, 0.2, size=(B, S, H)), jnp.float32)
+    A = -jnp.asarray(RNG.uniform(0.1, 1.0, size=(H,)), jnp.float32)
+    Bm = jnp.asarray(RNG.normal(size=(B, S, G, N)), jnp.float32)
+    Cm = jnp.asarray(RNG.normal(size=(B, S, G, N)), jnp.float32)
+    for chunk in (8, 16, 64):
+        got, _ = _ssd_chunked(x, dt, A, Bm, Cm, chunk)
+        want = ref.ssd_ref(x, dt, A, Bm, Cm)
+        assert float(jnp.max(jnp.abs(got - want))) < 1e-4, chunk

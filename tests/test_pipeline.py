@@ -1,0 +1,115 @@
+"""Executable pipeline: PC derivation, reorder-equivalence, adaptivity."""
+import numpy as np
+import pytest
+
+from repro.core import random_plan, ro3, scm, topsort
+from repro.pipeline import FlowStats, FusedExecutor, HostExecutor
+from repro.pipeline.adaptive import AdaptivePipeline
+from repro.pipeline.case_study import (
+    case_study_extra_edges, case_study_ops, make_tweets,
+)
+from repro.pipeline.loader import TokenLoader
+
+PAPER_TABLE2 = [
+    (1, 8), (2, 3), (2, 7), (2, 9), (2, 10),
+    (4, 7), (4, 9), (4, 10), (4, 11),
+    (5, 6), (5, 7), (5, 9), (5, 10), (7, 8),
+]
+
+
+def test_derived_pc_covers_paper_table2():
+    stats = FlowStats(case_study_ops(), extra_edges=case_study_extra_edges())
+    flow = stats.to_flow()
+    for a, b in PAPER_TABLE2:
+        assert flow.must_precede(a, b), (a, b)
+    # source first, sink last (SISO structure)
+    for i in range(1, 13):
+        assert flow.must_precede(0, i)
+    for i in range(1, 12):
+        assert flow.must_precede(i, 12)
+
+
+def _run_plans_and_compare(order_a, order_b, n=50_000):
+    ops = case_study_ops()
+    ex = HostExecutor(ops)
+    tweets = make_tweets(n, seed=11)
+    out_a = ex.run(tweets, order_a)
+    out_b = ex.run(tweets, order_b)
+    ka, kb = np.sort(out_a["tag"]), np.sort(out_b["tag"])
+    assert ka.shape == kb.shape
+    assert (ka == kb).all()
+    for fld in ("sentiment_avg", "sales", "campaign", "region", "date"):
+        a = np.sort(np.asarray(out_a[fld]))
+        b = np.sort(np.asarray(out_b[fld]))
+        np.testing.assert_allclose(a, b, rtol=1e-6)
+
+
+def test_reordering_preserves_results():
+    stats = FlowStats(case_study_ops(), extra_edges=case_study_extra_edges())
+    flow = stats.to_flow()
+    init = list(range(13))
+    for seed in range(3):
+        alt = random_plan(flow, seed)
+        _run_plans_and_compare(init, alt)
+
+
+def test_optimized_plan_faster_in_scm_and_equivalent():
+    ops = case_study_ops()
+    stats = FlowStats(ops, extra_edges=case_study_extra_edges())
+    ex = HostExecutor(ops, stats=stats)
+    tweets = make_tweets(100_000, seed=5)
+    init = list(range(13))
+    ex.run(tweets, init)
+    flow = stats.to_flow()
+    opt, c_opt = ro3(flow)
+    assert c_opt < scm(flow, init)
+    _run_plans_and_compare(init, opt)
+
+
+def test_fused_matches_host():
+    ops = case_study_ops()
+    stats = FlowStats(ops, extra_edges=case_study_extra_edges())
+    flow = stats.to_flow()
+    order = random_plan(flow, 2)
+    tweets = make_tweets(30_000, seed=3)
+    host = HostExecutor(ops).run(dict(tweets), order)
+    fields, mask = FusedExecutor(ops).run(
+        {k: np.asarray(v) for k, v in tweets.items()}, order
+    )
+    ft = np.asarray(fields["tag"])[np.asarray(mask)]
+    assert np.array_equal(np.sort(ft), np.sort(host["tag"]))
+
+
+def test_adaptive_pipeline_learns_and_roundtrips():
+    ap = AdaptivePipeline(
+        case_study_ops(), reoptimize_every=2,
+        extra_edges=case_study_extra_edges(),
+    )
+    p0 = list(ap.plan)
+    for i in range(4):
+        ap.run(make_tweets(20_000, seed=i))
+    assert ap.plan != p0  # learned something from measurements
+    state = ap.state_dict()
+    ap2 = AdaptivePipeline(
+        case_study_ops(), reoptimize_every=2,
+        extra_edges=case_study_extra_edges(),
+    )
+    ap2.load_state_dict(state)
+    assert ap2.plan == ap.plan
+    assert ap2.batches_seen == ap.batches_seen
+    np.testing.assert_allclose(ap2.stats.cost, ap.stats.cost)
+
+
+def test_loader_shapes_and_exact_resume():
+    ld = TokenLoader(batch=4, seq=64, vocab=512, doc_len=128,
+                     docs_per_chunk=128, seed=9, reoptimize_every=3)
+    b1 = ld.next_batch()
+    assert b1["tokens"].shape == (4, 64)
+    assert (b1["tokens"][:, 1:] == b1["labels"][:, :-1]).all()
+    state = ld.state_dict()
+    b2 = ld.next_batch()
+    ld2 = TokenLoader(batch=4, seq=64, vocab=512, doc_len=128,
+                      docs_per_chunk=128, seed=9, reoptimize_every=3)
+    ld2.load_state_dict(state)
+    b2r = ld2.next_batch()
+    assert np.array_equal(b2["tokens"], b2r["tokens"])
