@@ -1,0 +1,58 @@
+"""Registry sweep: every optimizer in ``repro.optim`` on representative flows.
+
+New algorithms are benchmarked automatically the moment they are registered;
+capability tags gate what each algorithm is offered (exhaustive enumerators
+skip large flows, KBZ skips non-forest precedence graphs).
+"""
+from __future__ import annotations
+
+import inspect
+
+import numpy as np
+
+from repro.core import case_study_flow, random_flow, random_plan, scm
+from repro.optim import STOCHASTIC, get_optimizer, list_optimizers
+
+
+def _seed_kw(opt) -> str:
+    """Name of the optimizer's seed parameter ("rng" for swap, else "seed")."""
+    return "rng" if "rng" in inspect.signature(opt.fn).parameters else "seed"
+
+
+def _flows(quick: bool) -> list[tuple[str, object]]:
+    out = [("case_study", case_study_flow())]
+    sizes = ((15, 0.4),) if quick else ((15, 0.4), (40, 0.4), (80, 0.6))
+    for n, pc in sizes:
+        out.append((f"random_n{n}_pc{int(pc * 100)}", random_flow(n, pc, rng=n)))
+    return out
+
+
+def run(reps: int = 3, quick: bool = False) -> list[dict]:
+    rows = []
+    for fname, f in _flows(quick):
+        c0 = scm(f, random_plan(f, 0))
+        for name in list_optimizers():
+            opt = get_optimizer(name)
+            if not opt.supports(f):
+                continue
+            if STOCHASTIC in opt.tags:
+                # vary the seed so best-of-reps actually samples the search
+                results = [opt(f, **{_seed_kw(opt): rep}) for rep in range(reps)]
+            else:  # deterministic: reps only average out timing noise
+                results = [opt(f) for _ in range(reps)]
+            best = min(r.scm for r in results)
+            rows.append(
+                {
+                    "bench": "optimizers",
+                    "flow": fname,
+                    "n": f.n,
+                    "algo": name,
+                    "scm": round(best, 4),
+                    "normalized_scm": round(best / c0, 4),
+                    "wall_ms": round(
+                        float(np.mean([r.wall_time_s for r in results])) * 1e3, 2
+                    ),
+                    "tags": "|".join(sorted(opt.tags)),
+                }
+            )
+    return rows

@@ -1,6 +1,9 @@
-"""Benchmark driver: one module per paper table/figure.
+"""Benchmark driver: one module per paper table/figure, plus the optimizer
+registry sweep (every algorithm registered in ``repro.optim`` is picked up
+automatically).
 
   PYTHONPATH=src python -m benchmarks.run [--only fig10,table3] [--reps N]
+  PYTHONPATH=src python -m benchmarks.run --quick   # CI smoke subset
 
 Prints CSV blocks per benchmark and writes benchmarks/results/*.csv.
 """
@@ -8,12 +11,14 @@ from __future__ import annotations
 
 import argparse
 import importlib
+import inspect
 import os
 import time
 
 from .common import rows_to_csv
 
 BENCHES = [
+    "optimizers",  # repro.optim registry sweep (auto-extends)
     "case_study",  # §3, Figures 2-4
     "fig5",        # exact-vs-heuristic gap, 15 tasks
     "fig10",       # RO-* vs Swap across n and PC density
@@ -25,6 +30,8 @@ BENCHES = [
     "kernels",     # kernel-level SCM validation
 ]
 
+QUICK_BENCHES = ["optimizers", "case_study"]  # CI smoke subset
+
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
@@ -32,8 +39,15 @@ def main(argv=None) -> int:
                     help="comma-separated subset of: " + ",".join(BENCHES))
     ap.add_argument("--reps", type=int, default=None,
                     help="override repetitions (smaller = faster)")
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke run: cheap subset, single repetition")
     args = ap.parse_args(argv)
-    only = args.only.split(",") if args.only else BENCHES
+    if args.only:
+        only = args.only.split(",")
+    else:
+        only = QUICK_BENCHES if args.quick else BENCHES
+    if args.quick and args.reps is None:
+        args.reps = 1
 
     outdir = os.path.join(os.path.dirname(__file__), "results")
     os.makedirs(outdir, exist_ok=True)
@@ -43,8 +57,11 @@ def main(argv=None) -> int:
             continue
         mod = importlib.import_module(f".bench_{name}", __package__)
         t0 = time.time()
+        kw = {"reps": args.reps} if args.reps else {}
+        if args.quick and "quick" in inspect.signature(mod.run).parameters:
+            kw["quick"] = True
         try:
-            rows = mod.run(**({"reps": args.reps} if args.reps else {}))
+            rows = mod.run(**kw)
         except Exception:  # noqa: BLE001
             import traceback
 

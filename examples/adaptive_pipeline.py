@@ -3,7 +3,9 @@
 Starts with a corpus where the quality filter is cheap to satisfy, then
 shifts the distribution so selectivities change — the controller notices
 via its EMAs and re-plans with RO-III (paper §1 motivation: a plan optimal
-for one data set may be significantly suboptimal for another).
+for one data set may be significantly suboptimal for another).  Any name
+from the ``repro.optim`` registry works for ``optimizer=`` — e.g.
+"batched-ro3" or "portfolio" for the device-batched searches.
 
   PYTHONPATH=src python examples/adaptive_pipeline.py
 """

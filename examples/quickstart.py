@@ -1,8 +1,10 @@
-"""Quickstart: optimize a data flow with the paper's algorithms.
+"""Quickstart: optimize a data flow with every registered algorithm.
 
-Builds the paper's PDI case-study flow (§3, Tables 1-2), runs every
-optimizer, and prints the plans + SCM costs — then executes the flow for
-real on synthetic tweets and shows measured wall-clock per plan.
+Builds the paper's PDI case-study flow (§3, Tables 1-2), enumerates the
+``repro.optim`` registry (the paper's exact + approximate algorithms plus
+the beyond-paper device-batched searches), and prints the plans + SCM
+costs — then executes the flow for real on synthetic tweets and shows
+measured wall-clock per plan.
 
   PYTHONPATH=src python examples/quickstart.py
 """
@@ -10,9 +12,8 @@ import time
 
 import numpy as np
 
-from repro.core import (
-    case_study_flow, greedy1, partition, ro1, ro2, ro3, scm, swap, topsort,
-)
+from repro.core import case_study_flow, scm
+from repro.optim import get_optimizer, list_optimizers
 from repro.pipeline import FlowStats, HostExecutor
 from repro.pipeline.case_study import (
     case_study_extra_edges, case_study_ops, make_tweets,
@@ -23,21 +24,16 @@ init = list(range(flow.n))
 print(f"case-study flow: {flow.n} tasks, PC density {flow.pc_fraction():.0%}")
 print(f"initial plan SCM: {scm(flow, init):.2f}\n")
 
-algos = {
-    "Swap      (existing [10])": lambda: swap(flow, initial=list(init)),
-    "GreedyI   (existing [11])": lambda: greedy1(flow),
-    "Partition (existing [11])": lambda: partition(flow),
-    "RO-I      (paper ours)": lambda: ro1(flow),
-    "RO-II     (paper ours)": lambda: ro2(flow),
-    "RO-III    (paper ours)": lambda: ro3(flow),
-    "TopSort   (exact)": lambda: topsort(flow),
-}
 plans = {}
-for name, fn in algos.items():
-    order, cost = fn()
-    plans[name] = order
-    print(f"{name}: SCM={cost:7.2f}  "
-          f"[{' -> '.join(flow.names[v].split()[0] for v in order[:5])} ...]")
+for name in list_optimizers():
+    opt = get_optimizer(name)
+    if not opt.supports(flow):
+        print(f"{name:13s}: skipped ({'|'.join(sorted(opt.tags))})")
+        continue
+    res = opt(flow)
+    plans[name] = list(res.order)
+    print(f"{name:13s}: SCM={res.scm:7.2f}  ({res.wall_time_s * 1e3:7.2f}ms)  "
+          f"[{' -> '.join(flow.names[v].split()[0] for v in res.order[:5])} ...]")
 
 # ---------------------------------------------------------- execute for real
 print("\nexecuting on 300k synthetic tweets (host pipeline, compacting):")
@@ -45,9 +41,10 @@ ops = case_study_ops()
 stats = FlowStats(ops, extra_edges=case_study_extra_edges())
 ex = HostExecutor(ops, stats=stats)
 tweets = make_tweets(300_000, seed=7)
-for name in ("Swap      (existing [10])", "RO-III    (paper ours)",
-             "TopSort   (exact)"):
-    order = plans[name]
+for name in ("swap", "ro3", "batched-ro3", "topsort"):
+    order = plans.get(name)
+    if order is None:  # registry gate skipped it above
+        continue
     ex.run(tweets, order)  # warm
     t0 = time.perf_counter()
     out = ex.run(tweets, order)

@@ -7,7 +7,7 @@ import random
 
 import numpy as np
 
-from .cost import scm
+from .cost import scm, swap_delta
 from .flow import Flow
 
 __all__ = ["swap", "greedy1", "greedy2", "partition", "random_plan"]
@@ -28,20 +28,18 @@ def swap(
     equivalent to the re-ordering subset of Simitsis et al. [10])."""
     order = list(initial) if initial is not None else random_plan(flow, rng)
     n = flow.n
-    cost, sel, pred = flow.cost, flow.sel, flow.pred_mask
+    pred = flow.pred_mask
     changed = True
     while changed:
         changed = False
-        prod = 1.0
         for k in range(n - 1):
             x, y = order[k], order[k + 1]
             if not ((pred[y] >> x) & 1):  # constraint allows the swap
-                delta = cost[y] + sel[y] * cost[x] - cost[x] - sel[x] * cost[y]
-                if delta < -1e-12:
+                # S_k = 1: the selectivity prefix is positive, so it cannot
+                # change the sign of the delta and the swap decision.
+                if swap_delta(flow, order, k, 1.0) < -1e-12:
                     order[k], order[k + 1] = y, x
                     changed = True
-                    x = order[k]
-            prod *= sel[x]
     return order, scm(flow, order)
 
 

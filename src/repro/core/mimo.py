@@ -214,11 +214,18 @@ def _try_factorize(mimo: MIMOFlow) -> bool:
 
 def optimize_mimo(
     mimo: MIMOFlow,
-    optimizer: Callable[[Flow], tuple[list[int], float]],
+    optimizer: "str | Callable[[Flow], tuple[list[int], float]]" = "ro3",
     max_rounds: int = 10,
 ) -> float:
     """Algorithm 4: alternate segment re-ordering and factorize/distribute
-    moves until convergence.  Returns the final estimated total cost."""
+    moves until convergence.  Returns the final estimated total cost.
+
+    ``optimizer`` is a ``repro.optim`` registry name (default "ro3") or any
+    legacy ``flow -> (order, cost)`` callable for the SISO segment step.
+    """
+    from ..optim import resolve  # lazy: repro.optim imports repro.core
+
+    optimizer = resolve(optimizer)
     for _ in range(max_rounds):
         changed = _reorder_segments(mimo, optimizer)
         changed |= _try_factorize(mimo)

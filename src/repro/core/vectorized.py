@@ -1,123 +1,12 @@
-"""Beyond-paper: JAX-vectorized plan search.
+"""Backward-compatibility shim for the device-batched plan search.
 
-The paper's heuristics probe one plan at a time on a CPU.  An accelerator
-evaluates *populations* of plans at once: SCM of a (B, n) batch of orders is
-two gathers, an exclusive cumprod and a dot — embarrassingly data-parallel
-and MXU/VPU friendly.  We exploit this with a portfolio + mutate-and-select
-local search seeded by the paper's own heuristics.  Recorded separately in
-EXPERIMENTS.md §Perf as a beyond-paper optimization.
+The substrate moved to ``repro.optim.batched`` where it is shared by every
+layer (SISO portfolio, batched RO-III, adaptive pipeline, benchmarks) and
+generalized with the vmapped block-move hill climb; see EXPERIMENTS.md §Perf.
+This module re-exports the original names so existing imports keep working.
 """
 from __future__ import annotations
 
-import functools
-import random
-
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from .cost import scm
-from .flow import Flow
-from .heuristics import greedy1, greedy2, random_plan, swap
-from .rank import ro1, ro2, ro3
+from ..optim.batched import portfolio_search, scm_batch, valid_batch
 
 __all__ = ["scm_batch", "valid_batch", "portfolio_search"]
-
-
-@functools.partial(jax.jit, static_argnames=())
-def scm_batch(cost: jax.Array, sel: jax.Array, orders: jax.Array) -> jax.Array:
-    """SCM of each row of ``orders`` (B, n) int32. O(Bn) on device."""
-    c = cost[orders]  # (B, n)
-    s = sel[orders]
-    prefix = jnp.concatenate(  # exclusive prefix product of selectivities
-        [jnp.ones_like(s[:, :1]), jnp.cumprod(s[:, :-1], axis=-1)], axis=-1
-    )
-    return jnp.sum(c * prefix, axis=-1)
-
-
-@jax.jit
-def valid_batch(pred: jax.Array, orders: jax.Array) -> jax.Array:
-    """Validity of each order against a dense (n, n) bool constraint matrix
-    ``pred[j, k] = True`` iff j must precede k."""
-    B, n = orders.shape
-    pos = jnp.zeros((B, n), dtype=jnp.int32)
-    pos = pos.at[jnp.arange(B)[:, None], orders].set(
-        jnp.broadcast_to(jnp.arange(n, dtype=jnp.int32), (B, n))
-    )
-    bad = pred[None, :, :] & (pos[:, :, None] >= pos[:, None, :])
-    return ~jnp.any(bad, axis=(1, 2))
-
-
-def _mutate(
-    order: list[int], flow: Flow, rng: random.Random, moves: int
-) -> list[int]:
-    """Random valid block moves (the RO-III move set, applied blindly)."""
-    out = list(order)
-    n = len(out)
-    for _ in range(moves):
-        size = rng.randint(1, min(4, n))
-        s = rng.randrange(0, n - size)
-        e = s + size
-        block = out[s:e]
-        bsucc = 0
-        for b in block:
-            bsucc |= flow.succ_mask[b]
-        t = e
-        limit = e
-        mid = 0
-        while limit < n:
-            mid |= 1 << out[limit]
-            if bsucc & mid:
-                break
-            limit += 1
-        if limit == e:
-            continue
-        t = rng.randint(e + 1, limit)
-        out[s:t] = out[e:t] + block
-    return out
-
-
-def portfolio_search(
-    flow: Flow,
-    generations: int = 8,
-    population: int = 256,
-    elites: int = 16,
-    seed: int = 0,
-) -> tuple[list[int], float]:
-    """Seed a population with every paper heuristic + random plans, then run
-    mutate-and-select generations with device-batched SCM evaluation."""
-    rng = random.Random(seed)
-    seeds: list[list[int]] = []
-    for fn in (swap, greedy1, greedy2, ro1, ro2, ro3):
-        try:
-            order, _ = fn(flow)
-            seeds.append(order)
-        except Exception:
-            pass
-    while len(seeds) < population:
-        seeds.append(random_plan(flow, rng))
-
-    cost_d = jnp.asarray(flow.cost)
-    sel_d = jnp.asarray(flow.sel)
-    pop = seeds[:population]
-    best_order: list[int] = pop[0]
-    best_cost = np.inf
-    for _ in range(generations):
-        arr = jnp.asarray(np.array(pop, dtype=np.int32))
-        costs = np.asarray(scm_batch(cost_d, sel_d, arr))
-        idx = np.argsort(costs)
-        # device eval is f32; re-score the head of the ranking in f64 so the
-        # returned plan is never worse than its seeds by rounding alone.
-        for i in idx[: max(4, elites // 4)]:
-            exact = scm(flow, pop[i])
-            if exact < best_cost:
-                best_cost = exact
-                best_order = pop[i]
-        elite = [pop[i] for i in idx[:elites]]
-        nxt = list(elite)
-        while len(nxt) < population:
-            parent = elite[rng.randrange(len(elite))]
-            nxt.append(_mutate(parent, flow, rng, moves=rng.randint(1, 4)))
-        pop = nxt
-    assert flow.is_valid_order(best_order)
-    return best_order, scm(flow, best_order)

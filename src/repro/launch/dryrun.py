@@ -24,6 +24,63 @@ Usage:
   PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--out results.json]
 """
 import os
+import sys
+
+
+def optimizer_dryrun() -> int:
+    """Exercise every optimizer in the ``repro.optim`` registry by name.
+
+    The serving/pipeline layers select plan optimizers from config strings;
+    this sweep proves each registered algorithm lowers to a valid plan on
+    the flows it claims to support — newly registered algorithms are
+    covered automatically, mirroring the (arch x shape) model sweep below.
+
+    Defined (and dispatched from ``__main__``) *before* the XLA_FLAGS
+    mutation and model-stack imports below: the registry sweep wants the
+    real single-device backend, not 512 placeholder hosts, and must not
+    depend on the model/sharding modules.
+    """
+    from ..core.generators import case_study_flow, random_flow
+    from ..optim import get_optimizer, list_optimizers
+
+    flows = [
+        ("case_study", case_study_flow()),
+        ("random_n40_pc40", random_flow(40, 0.4, rng=0)),
+    ]
+    failures = 0
+    for fname, f in flows:
+        print(f"# {fname}: n={f.n}, pc_density={f.pc_fraction():.0%}", flush=True)
+        for name in list_optimizers():
+            opt = get_optimizer(name)
+            if not opt.supports(f):
+                why = (
+                    f"n={f.n} > max_n={opt.max_n}"
+                    if opt.max_n is not None and f.n > opt.max_n
+                    else "structural requirements not met"
+                )
+                print(f"[skip] {name}: {why}")
+                continue
+            try:
+                r = opt(f)
+            except Exception as e:  # noqa: BLE001 — report, keep sweeping
+                failures += 1
+                print(f"[FAIL] {name}: {type(e).__name__}: {e}", file=sys.stderr)
+                continue
+            if not f.is_valid_order(list(r.order)):
+                failures += 1
+                print(f"[FAIL] {name}: invalid plan", file=sys.stderr)
+                continue
+            print(
+                f"[ok]   {name:13s} scm={r.scm:10.3f} "
+                f"wall={r.wall_time_s * 1e3:8.2f}ms "
+                f"tags={','.join(sorted(opt.tags))}",
+                flush=True,
+            )
+    return 1 if failures else 0
+
+
+if __name__ == "__main__" and "--optimizers" in sys.argv:
+    raise SystemExit(optimizer_dryrun())
 
 os.environ["XLA_FLAGS"] = (
     "--xla_force_host_platform_device_count=512 "
@@ -368,8 +425,16 @@ def main(argv=None):
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--counts-only", action="store_true",
                     help="skip the rolled full-depth compile")
+    ap.add_argument("--optimizers", action="store_true",
+                    help="dry-run the repro.optim registry instead of "
+                         "compiling model cells")
     ap.add_argument("--out", default=None)
     args = ap.parse_args(argv)
+    if args.optimizers:
+        # CLI invocations dispatch at module top, before the XLA_FLAGS
+        # mutation; this branch is a fallback for programmatic main() calls
+        # (correct, merely slower under the 512-device host backend).
+        return optimizer_dryrun()
 
     cells: list[tuple[str, str]] = []
     archs = list_archs() if (args.all or not args.arch) else [args.arch]

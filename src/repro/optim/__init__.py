@@ -1,0 +1,57 @@
+# Unified optimizer engine: a capability-tagged registry over every plan
+# optimizer in the repo plus the device-batched plan-search substrate.
+# Importing this package registers all core algorithms (see adapters.py).
+from .api import (
+    APPROXIMATE,
+    BATCHABLE,
+    EXACT,
+    EXHAUSTIVE,
+    FOREST_ONLY,
+    HANDLES_CONSTRAINTS,
+    STOCHASTIC,
+    Optimizer,
+    PlanResult,
+    RegisteredOptimizer,
+    get_optimizer,
+    list_optimizers,
+    register,
+    resolve,
+)
+from .batched import (
+    block_move_delta_batch,
+    block_move_pass_batch,
+    hill_climb,
+    population_hill_climb,
+    portfolio_search,
+    pred_matrix,
+    prefix_arrays_batch,
+    scm_batch,
+    valid_batch,
+)
+from . import adapters as _adapters  # noqa: F401 — populates the registry
+
+__all__ = [
+    "PlanResult",
+    "Optimizer",
+    "RegisteredOptimizer",
+    "register",
+    "get_optimizer",
+    "list_optimizers",
+    "resolve",
+    "EXACT",
+    "APPROXIMATE",
+    "HANDLES_CONSTRAINTS",
+    "BATCHABLE",
+    "STOCHASTIC",
+    "FOREST_ONLY",
+    "EXHAUSTIVE",
+    "scm_batch",
+    "valid_batch",
+    "prefix_arrays_batch",
+    "block_move_delta_batch",
+    "block_move_pass_batch",
+    "pred_matrix",
+    "hill_climb",
+    "population_hill_climb",
+    "portfolio_search",
+]

@@ -1,0 +1,128 @@
+"""Thin adapters registering every core optimizer under the uniform protocol.
+
+The algorithmic math lives in ``repro.core``; each entry here only fixes a
+deterministic default signature and declares capabilities.  Importing this
+module (or ``repro.optim``) populates the registry.
+"""
+from __future__ import annotations
+
+from ..core import exact, heuristics, rank
+from ..core.flow import Flow
+from . import batched
+from .api import (
+    APPROXIMATE,
+    BATCHABLE,
+    EXACT,
+    EXHAUSTIVE,
+    FOREST_ONLY,
+    HANDLES_CONSTRAINTS,
+    STOCHASTIC,
+    register,
+)
+
+__all__: list[str] = []
+
+
+def _forest_shaped(flow: Flow) -> bool:
+    return all(len(p) <= 1 for p in flow.direct_preds())
+
+
+def _swap(flow: Flow, initial=None, rng=0):
+    # rng defaults to 0 (not None) so the registered entry is deterministic
+    return heuristics.swap(flow, initial=initial, rng=rng)
+
+
+# ------------------------------------------------------------ exact (§4)
+register(
+    "backtracking",
+    exact.backtracking,
+    tags={EXACT, HANDLES_CONSTRAINTS, EXHAUSTIVE},
+    max_n=12,
+    doc="Recursive enumeration of all valid orderings, O(n!) (§4.1).",
+)
+register(
+    "dp",
+    exact.dp,
+    tags={EXACT, HANDLES_CONSTRAINTS, EXHAUSTIVE},
+    max_n=18,
+    doc="Held-Karp DP over precedence-feasible subsets, O(n^2 2^n) (§4.2).",
+)
+register(
+    "topsort",
+    exact.topsort,
+    tags={EXACT, HANDLES_CONSTRAINTS, EXHAUSTIVE},
+    max_n=16,
+    supports=lambda f: f.n <= 12 or f.pc_fraction() >= 0.5,
+    doc="Varol-Rotem all-topological-sortings with O(1) swap deltas (§4.3); "
+    "the supports() guard reflects that enumeration cost tracks the number "
+    "of linear extensions — it scales much further on dense PCs.",
+)
+
+# --------------------------------------------- existing heuristics (§5.1)
+register(
+    "swap",
+    _swap,
+    tags={APPROXIMATE, HANDLES_CONSTRAINTS, STOCHASTIC},
+    doc="Adjacent-swap hill climbing from a random valid plan (§5.1.1).",
+)
+register(
+    "greedy1",
+    heuristics.greedy1,
+    tags={APPROXIMATE, HANDLES_CONSTRAINTS},
+    doc="Append the eligible task with maximum rank (§5.1.2).",
+)
+register(
+    "greedy2",
+    heuristics.greedy2,
+    tags={APPROXIMATE, HANDLES_CONSTRAINTS},
+    doc="Right-to-left construction by minimum rank (§5.1.2).",
+)
+register(
+    "partition",
+    heuristics.partition,
+    tags={APPROXIMATE, HANDLES_CONSTRAINTS},
+    doc="Eligibility-level clustering + per-cluster exhaustive order (§5.1.3).",
+)
+
+# -------------------------------------------------- rank ordering (§5.2)
+register(
+    "kbz",
+    rank.kbz,
+    tags={EXACT, FOREST_ONLY},
+    supports=_forest_shaped,
+    doc="KBZ chainification; exact for tree-shaped precedence graphs (§5.2.1).",
+)
+register(
+    "ro1",
+    rank.ro1,
+    tags={APPROXIMATE, HANDLES_CONSTRAINTS},
+    doc="Tree-ify by max-rank parent, KBZ, repair validity (§5.2.2).",
+)
+register(
+    "ro2",
+    rank.ro2,
+    tags={APPROXIMATE, HANDLES_CONSTRAINTS},
+    doc="Branch-merge constraint augmentation + KBZ (§5.2.3).",
+)
+register(
+    "ro3",
+    rank.ro3,
+    tags={APPROXIMATE, HANDLES_CONSTRAINTS},
+    doc="RO-II + block-transposition hill climb with O(1) deltas (§5.2.4).",
+)
+
+# ------------------------------------- device-batched searches (beyond-paper)
+register(
+    "batched-ro3",
+    batched.population_hill_climb,
+    tags={APPROXIMATE, HANDLES_CONSTRAINTS, BATCHABLE},
+    doc="RO-III refinement of a whole plan population in one vmapped device "
+    "call; row 0 seeds from RO-II so it is never worse than scalar ro3.",
+)
+register(
+    "portfolio",
+    batched.portfolio_search,
+    tags={APPROXIMATE, HANDLES_CONSTRAINTS, BATCHABLE, STOCHASTIC},
+    doc="Registry-seeded portfolio + mutate-and-select generations with "
+    "device-batched SCM evaluation.",
+)

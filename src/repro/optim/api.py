@@ -1,0 +1,193 @@
+"""Uniform optimizer protocol, result type and capability-tagged registry.
+
+Every plan optimizer in the repo — exact enumerators (§4), the existing
+heuristics (§5.1), the rank-ordering family (§5.2) and the beyond-paper
+device-batched searches — is reachable through one string-keyed registry.
+Consumers (``pipeline.adaptive``, ``core.mimo.optimize_mimo``,
+``benchmarks.run``, ``launch.dryrun``) pick algorithms by name instead of
+importing them; new algorithms become benchmarkable and schedulable the
+moment they are registered.
+
+The algorithmic math stays in ``repro.core``; this module only defines the
+calling convention:
+
+* ``PlanResult`` — order, SCM, wall time, free-form metadata.
+* ``Optimizer``  — the callable protocol ``(Flow, **opts) -> PlanResult``.
+* ``register`` / ``get_optimizer`` / ``list_optimizers`` — the registry,
+  with capability tags (exact vs approximate, handles-constraints,
+  batchable, ...) so callers can filter by what they need.
+* ``resolve`` — compatibility shim turning a name, a registered optimizer
+  or any legacy ``flow -> (order, cost)`` callable into the legacy tuple
+  convention used by older call sites.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Iterable, Mapping, Protocol, runtime_checkable
+
+from ..core.flow import Flow
+
+__all__ = [
+    "EXACT",
+    "APPROXIMATE",
+    "HANDLES_CONSTRAINTS",
+    "BATCHABLE",
+    "STOCHASTIC",
+    "FOREST_ONLY",
+    "EXHAUSTIVE",
+    "PlanResult",
+    "Optimizer",
+    "RegisteredOptimizer",
+    "register",
+    "get_optimizer",
+    "list_optimizers",
+    "resolve",
+]
+
+# ------------------------------------------------------------ capability tags
+EXACT = "exact"  # returns a provably optimal plan (on supported flows)
+APPROXIMATE = "approximate"  # heuristic; no optimality guarantee
+HANDLES_CONSTRAINTS = "handles-constraints"  # accepts arbitrary PC DAGs
+BATCHABLE = "batchable"  # evaluates candidate-plan populations on device
+STOCHASTIC = "stochastic"  # result depends on an rng seed
+FOREST_ONLY = "forest-only"  # requires a tree-shaped precedence graph
+EXHAUSTIVE = "exhaustive"  # enumeration-based; super-polynomial in n
+
+TupleFn = Callable[..., "tuple[list[int], float]"]
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanResult:
+    """Outcome of one optimizer invocation on one flow."""
+
+    order: tuple[int, ...]
+    scm: float
+    wall_time_s: float
+    metadata: Mapping[str, Any] = dataclasses.field(default_factory=dict)
+
+    def as_tuple(self) -> tuple[list[int], float]:
+        """The legacy ``(order, cost)`` convention of the core functions."""
+        return list(self.order), self.scm
+
+
+@runtime_checkable
+class Optimizer(Protocol):
+    """The uniform calling convention all registered optimizers satisfy."""
+
+    name: str
+    tags: frozenset[str]
+
+    def __call__(self, flow: Flow, **opts: Any) -> PlanResult: ...
+
+
+@dataclasses.dataclass(frozen=True)
+class RegisteredOptimizer:
+    """A registry entry: core ``flow -> (order, cost)`` fn + capabilities.
+
+    ``max_n`` bounds the flow sizes enumeration-based algorithms are offered
+    for (``supports`` returns False beyond it); ``supports_fn`` adds
+    structural checks (e.g. KBZ needs a forest-shaped PC).
+    """
+
+    name: str
+    fn: TupleFn
+    tags: frozenset[str]
+    doc: str = ""
+    max_n: int | None = None
+    supports_fn: Callable[[Flow], bool] | None = None
+
+    def supports(self, flow: Flow) -> bool:
+        if self.max_n is not None and flow.n > self.max_n:
+            return False
+        if self.supports_fn is not None and not self.supports_fn(flow):
+            return False
+        return True
+
+    def __call__(self, flow: Flow, **opts: Any) -> PlanResult:
+        t0 = time.perf_counter()
+        order, cost = self.fn(flow, **opts)
+        dt = time.perf_counter() - t0
+        meta: dict[str, Any] = {"optimizer": self.name, "n": flow.n}
+        if opts:
+            meta["opts"] = dict(opts)
+        return PlanResult(tuple(order), float(cost), dt, meta)
+
+    def raw(self, flow: Flow, **opts: Any) -> tuple[list[int], float]:
+        """Legacy convention, bypassing timing/metadata."""
+        order, cost = self.fn(flow, **opts)
+        return list(order), float(cost)
+
+
+_REGISTRY: dict[str, RegisteredOptimizer] = {}
+
+
+def register(
+    name: str,
+    fn: TupleFn,
+    *,
+    tags: Iterable[str] = (),
+    doc: str = "",
+    max_n: int | None = None,
+    supports: Callable[[Flow], bool] | None = None,
+    overwrite: bool = False,
+) -> RegisteredOptimizer:
+    """Register ``fn`` (core convention ``flow -> (order, cost)``) by name."""
+    if name in _REGISTRY and not overwrite:
+        raise ValueError(f"optimizer {name!r} already registered")
+    entry = RegisteredOptimizer(
+        name=name,
+        fn=fn,
+        tags=frozenset(tags),
+        doc=doc,
+        max_n=max_n,
+        supports_fn=supports,
+    )
+    _REGISTRY[name] = entry
+    return entry
+
+
+def get_optimizer(name: str) -> RegisteredOptimizer:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        avail = ", ".join(sorted(_REGISTRY)) or "<registry empty>"
+        raise KeyError(f"unknown optimizer {name!r}; available: {avail}") from None
+
+
+def list_optimizers(
+    *, tags: Iterable[str] = (), exclude: Iterable[str] = ()
+) -> list[str]:
+    """Sorted names of registered optimizers carrying all ``tags`` and none
+    of ``exclude``."""
+    need = frozenset(tags)
+    ban = frozenset(exclude)
+    return sorted(
+        name
+        for name, opt in _REGISTRY.items()
+        if need <= opt.tags and not (ban & opt.tags)
+    )
+
+
+def resolve(spec: "str | RegisteredOptimizer | Callable") -> TupleFn:
+    """Normalize any optimizer spec to the legacy ``flow -> (order, cost)``
+    convention.
+
+    Accepts a registry name, a ``RegisteredOptimizer``, or any callable
+    returning either a ``PlanResult`` or an ``(order, cost)`` tuple.
+    """
+    if isinstance(spec, str):
+        return get_optimizer(spec).raw
+    if isinstance(spec, RegisteredOptimizer):
+        return spec.raw
+    if callable(spec):
+
+        def _call(flow: Flow, **opts: Any) -> tuple[list[int], float]:
+            out = spec(flow, **opts)
+            if isinstance(out, PlanResult):
+                return out.as_tuple()
+            order, cost = out
+            return list(order), float(cost)
+
+        return _call
+    raise TypeError(f"cannot resolve optimizer spec {spec!r}")

@@ -1,0 +1,417 @@
+"""Device-batched plan-search substrate (beyond-paper; EXPERIMENTS.md §Perf).
+
+The paper's algorithms probe one plan at a time on a CPU.  An accelerator
+evaluates *populations* of plans at once:
+
+* ``scm_batch``    — SCM of a (B, n) batch of orders is two gathers, an
+  exclusive cumprod and a dot: embarrassingly data-parallel.
+* ``valid_batch``  — constraint checks are a positions test against a dense
+  (n, n) precedence matrix.
+* ``block_move_pass_batch`` — RO-III's block-transposition local search
+  (paper Algorithm 2) as a vmapped per-plan state machine.  Each step
+  rebuilds the prefix arrays of §2's factorization (O(n)) and scores *all*
+  move targets of the current block with the O(1) delta
+  ``P * (W_M (1 - s_B) + W_B (s_M - 1))`` in one vectorized sweep, so a
+  population of B plans hill-climbs in lockstep on device.  The scan policy
+  (sizes 1..k, left-to-right, best target per block, stay on improvement,
+  sweep to fixpoint) replicates ``core.rank.block_move_pass`` move for move;
+  in float64 the refined plans match the scalar RO-III post-pass exactly.
+* ``portfolio_search`` — portfolio + mutate-and-select over generations,
+  seeded from any registered (non-batched) optimizer.
+
+``core.vectorized`` re-exports the original names for backward
+compatibility; new code should import from here.
+"""
+from __future__ import annotations
+
+import functools
+import random
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import enable_x64
+
+from ..core.cost import scm
+from ..core.flow import Flow
+from . import api
+
+__all__ = [
+    "scm_batch",
+    "valid_batch",
+    "prefix_arrays_batch",
+    "block_move_delta_batch",
+    "block_move_pass_batch",
+    "pred_matrix",
+    "hill_climb",
+    "population_hill_climb",
+    "portfolio_search",
+]
+
+_IMPROVE_EPS = -1e-12  # same strict-improvement threshold as core.rank
+
+
+@jax.jit
+def scm_batch(cost: jax.Array, sel: jax.Array, orders: jax.Array) -> jax.Array:
+    """SCM of each row of ``orders`` (B, n) int32. O(Bn) on device."""
+    c = cost[orders]  # (B, n)
+    s = sel[orders]
+    prefix = jnp.concatenate(  # exclusive prefix product of selectivities
+        [jnp.ones_like(s[:, :1]), jnp.cumprod(s[:, :-1], axis=-1)], axis=-1
+    )
+    return jnp.sum(c * prefix, axis=-1)
+
+
+@jax.jit
+def valid_batch(pred: jax.Array, orders: jax.Array) -> jax.Array:
+    """Validity of each order against a dense (n, n) bool constraint matrix
+    ``pred[j, k] = True`` iff j must precede k."""
+    B, n = orders.shape
+    pos = jnp.zeros((B, n), dtype=jnp.int32)
+    pos = pos.at[jnp.arange(B)[:, None], orders].set(
+        jnp.broadcast_to(jnp.arange(n, dtype=jnp.int32), (B, n))
+    )
+    bad = pred[None, :, :] & (pos[:, :, None] >= pos[:, None, :])
+    return ~jnp.any(bad, axis=(1, 2))
+
+
+@jax.jit
+def prefix_arrays_batch(
+    cost: jax.Array, sel: jax.Array, orders: jax.Array
+) -> tuple[jax.Array, jax.Array]:
+    """Per-row prefix arrays of ``core.cost.PrefixState``, shapes (B, n+1).
+
+    ``S[:, i]`` = selectivity product of ``order[:i]``; ``WP[:, i]`` = SCM of
+    the length-i prefix (so ``WP[:, n]`` is the full SCM).
+    """
+    c = cost[orders]
+    s = sel[orders]
+    S = jnp.concatenate(
+        [jnp.ones_like(s[:, :1]), jnp.cumprod(s, axis=-1)], axis=-1
+    )
+    WP = jnp.concatenate(
+        [jnp.zeros_like(c[:, :1]), jnp.cumsum(c * S[:, :-1], axis=-1)], axis=-1
+    )
+    return S, WP
+
+
+def _block_delta(Ss, Se, St, Ws, We, Wt):
+    """The O(1) block-move delta ``P (W_M (1 - s_B) + W_B (s_M - 1))`` from
+    prefix-array samples at positions s < e <= t (cost.py module docstring).
+    Shared by the exported batched helper and the hill-climb state machine;
+    broadcasts over any common shape of the six samples.
+    """
+    sB = Se / Ss
+    wB = (We - Ws) / Ss
+    sM = St / Se
+    wM = (Wt - We) / Se
+    return Ss * (wM * (1.0 - sB) + wB * (sM - 1.0))
+
+
+@jax.jit
+def block_move_delta_batch(
+    S: jax.Array, WP: jax.Array, s: jax.Array, e: jax.Array, t: jax.Array
+) -> jax.Array:
+    """SCM delta of moving block [s, e) after position t, per row.
+
+    ``S``/``WP`` are (B, n+1) from :func:`prefix_arrays_batch`; ``s``/``e``
+    are (B,) ints, ``t`` is (B,) or (B, T) — deltas are returned with ``t``'s
+    trailing shape.  Mirrors ``core.cost.PrefixState.block_move_delta``.
+    """
+    take = lambda arr, idx: jnp.take_along_axis(arr, idx, axis=1)
+    s2, e2 = s[:, None], e[:, None]
+    t2 = t if t.ndim == 2 else t[:, None]
+    delta = _block_delta(
+        take(S, s2), take(S, e2), take(S, t2),
+        take(WP, s2), take(WP, e2), take(WP, t2),
+    )
+    return delta if t.ndim == 2 else delta[:, 0]
+
+
+def _block_move_pass_row(
+    cost: jax.Array,
+    sel: jax.Array,
+    pred: jax.Array,
+    order: jax.Array,
+    *,
+    k: int,
+    max_rounds: int,
+) -> jax.Array:
+    """One plan's RO-III block-move local search as a lax.while_loop.
+
+    Replicates ``core.rank.block_move_pass`` exactly: sweep block sizes 1..k,
+    scan start positions left to right, score every constraint-feasible
+    target of the current block at once, apply the best strictly-improving
+    move (staying at the same position), and repeat sweeps to a fixpoint or
+    ``max_rounds``.  Designed to be vmapped over a (B, n) population.
+    """
+    n = order.shape[0]
+    idx = jnp.arange(n)
+    idx1 = jnp.arange(n + 1)
+    i32 = functools.partial(jnp.asarray, dtype=jnp.int32)
+
+    def body(st):
+        o, size, s = st["order"], st["size"], st["s"]
+        e = s + size
+        c = cost[o]
+        sl = sel[o]
+        S = jnp.concatenate([jnp.ones_like(sl[:1]), jnp.cumprod(sl)])
+        WP = jnp.concatenate([jnp.zeros_like(c[:1]), jnp.cumsum(c * S[:-1])])
+        # O(1) delta of moving [s, e) after t', for every t' in one sweep
+        delta = _block_delta(S[s], S[e], S, WP[s], WP[e], WP)  # (n+1,)
+        # feasible targets: no block member may be required before a task the
+        # block would jump over (positions [e, t'))
+        conflict = pred[o[:, None], o[None, :]]  # [i, j]: o_i must precede o_j
+        inblock = (idx >= s) & (idx < e)
+        blockprec = jnp.any(conflict & inblock[:, None], axis=0)  # per position
+        bad = (blockprec & (idx >= e)).astype(jnp.int32)
+        badcum = jnp.concatenate([i32(jnp.zeros(1)), jnp.cumsum(bad)])
+        feasible = (idx1 > e) & (badcum == badcum[e]) & (s + size <= n)
+        masked = jnp.where(feasible, delta, jnp.inf)
+        tbest = i32(jnp.argmin(masked))
+        apply = masked[tbest] < _IMPROVE_EPS
+        # permutation update: A|B|M|R -> A|M|B|R
+        msize = tbest - e
+        src = jnp.where(
+            idx < s,
+            idx,
+            jnp.where(
+                idx < s + msize,
+                idx + size,
+                jnp.where(idx < tbest, idx - msize, idx),
+            ),
+        )
+        new_o = jnp.where(apply, o[jnp.clip(src, 0, n - 1)], o)
+        improved = st["improved"] | apply
+        # scan-pointer bookkeeping (identical to the scalar loop structure)
+        s1 = jnp.where(apply, s, s + 1)
+        over = s1 + size > n
+        size1 = jnp.where(apply | ~over, size, size + 1)
+        s2 = jnp.where(apply | ~over, s1, 0)
+        sweep_done = ~apply & (size1 > k)
+        rounds = jnp.where(sweep_done, st["rounds"] + 1, st["rounds"])
+        done = st["done"] | (
+            sweep_done & (~improved | (rounds >= max_rounds))
+        )
+        return {
+            "order": new_o,
+            "size": jnp.where(sweep_done, i32(1), size1),
+            "s": jnp.where(sweep_done, i32(0), s2),
+            "improved": improved & ~sweep_done,
+            "rounds": rounds,
+            "done": done,
+        }
+
+    def guarded_body(st):
+        new = body(st)
+        # vmapped while_loop applies the body to finished rows too: freeze them
+        return jax.tree.map(
+            lambda a, b: jnp.where(st["done"], a, b), st, new
+        )
+
+    init = {
+        "order": order,
+        "size": i32(1),
+        "s": i32(0),
+        "improved": jnp.asarray(False),
+        "rounds": i32(0),
+        "done": jnp.asarray(False),
+    }
+    out = jax.lax.while_loop(lambda st: ~st["done"], guarded_body, init)
+    return out["order"]
+
+
+@functools.partial(jax.jit, static_argnames=("k", "max_rounds"))
+def block_move_pass_batch(
+    cost: jax.Array,
+    sel: jax.Array,
+    pred: jax.Array,
+    orders: jax.Array,
+    k: int = 5,
+    max_rounds: int = 50,
+) -> tuple[jax.Array, jax.Array]:
+    """Refine every row of ``orders`` (B, n) with the RO-III block-move local
+    search; returns (refined orders, their SCMs)."""
+    row = functools.partial(
+        _block_move_pass_row, cost, sel, pred, k=k, max_rounds=max_rounds
+    )
+    refined = jax.vmap(row)(orders)
+    return refined, scm_batch(cost, sel, refined)
+
+
+# ------------------------------------------------------------- host wrappers
+def pred_matrix(flow: Flow) -> np.ndarray:
+    """Dense (n, n) bool matrix: ``[j, k]`` iff j must precede k (closure)."""
+    n = flow.n
+    P = np.zeros((n, n), dtype=bool)
+    for v in range(n):
+        for p in flow.preds(v):
+            P[p, v] = True
+    return P
+
+
+def hill_climb(
+    flow: Flow,
+    orders,
+    k: int = 5,
+    max_rounds: int = 50,
+) -> tuple[np.ndarray, np.ndarray]:
+    """Device-refine a population of valid orders for ``flow``.
+
+    Runs in float64 (via the x64 context) so the refinement is bit-compatible
+    with the scalar ``core.rank.block_move_pass``.  Returns (orders (B, n)
+    int32, SCMs (B,) float64).
+    """
+    arr = np.asarray(orders, dtype=np.int32)
+    if arr.ndim != 2 or arr.shape[1] != flow.n:
+        raise ValueError(f"orders must be (B, {flow.n}); got {arr.shape}")
+    with enable_x64():
+        refined, costs = block_move_pass_batch(
+            jnp.asarray(flow.cost, dtype=jnp.float64),
+            jnp.asarray(flow.sel, dtype=jnp.float64),
+            jnp.asarray(pred_matrix(flow)),
+            jnp.asarray(arr),
+            k=k,
+            max_rounds=max_rounds,
+        )
+        out = np.asarray(refined)
+        c = np.asarray(costs)
+    return out, c
+
+
+def population_hill_climb(
+    flow: Flow,
+    k: int = 5,
+    population: int = 256,
+    seed: int = 0,
+    max_rounds: int = 50,
+) -> tuple[list[int], float]:
+    """Batched RO-III: refine a whole population of plans in one device call.
+
+    Row 0 is the RO-II plan — so the result is never worse than scalar RO-III
+    (the refinement replicates its move policy) — and the remaining rows are
+    random valid plans that climb in parallel, often escaping RO-III's local
+    optimum at no extra wall-clock on an accelerator.
+    """
+    from ..core.heuristics import random_plan
+    from ..core.rank import ro2
+
+    rng = random.Random(seed)
+    rows: list[list[int]] = [ro2(flow)[0]]
+    while len(rows) < population:
+        rows.append(random_plan(flow, rng))
+    refined, costs = hill_climb(flow, np.asarray(rows), k=k, max_rounds=max_rounds)
+    best = int(np.argmin(costs))
+    order = [int(v) for v in refined[best]]
+    assert flow.is_valid_order(order)
+    return order, scm(flow, order)
+
+
+# ---------------------------------------------------------- portfolio search
+def _mutate(
+    order: list[int], flow: Flow, rng: random.Random, moves: int
+) -> list[int]:
+    """Random valid block moves (the RO-III move set, applied blindly)."""
+    out = list(order)
+    n = len(out)
+    if n < 2:
+        return out
+    for _ in range(moves):
+        size = rng.randint(1, min(4, n - 1))
+        s = rng.randrange(0, n - size)
+        e = s + size
+        block = out[s:e]
+        bsucc = 0
+        for b in block:
+            bsucc |= flow.succ_mask[b]
+        limit = e
+        mid = 0
+        while limit < n:
+            mid |= 1 << out[limit]
+            if bsucc & mid:
+                break
+            limit += 1
+        if limit == e:
+            continue
+        t = rng.randint(e + 1, limit)
+        out[s:t] = out[e:t] + block
+    return out
+
+
+def _seed_plans(flow: Flow, seed_names: list[str] | None) -> list[list[int]]:
+    """One plan per registered seed optimizer (skipping unsupported ones)."""
+    if seed_names is None:
+        # every registered non-batched polynomial optimizer; batched ones are
+        # excluded to avoid recursion, exhaustive ones for cost
+        seed_names = api.list_optimizers(exclude=(api.BATCHABLE, api.EXHAUSTIVE))
+    plans: list[list[int]] = []
+    for name in seed_names:
+        opt = api.get_optimizer(name)
+        if not opt.supports(flow):
+            continue
+        try:
+            order, _ = opt.raw(flow)
+        except Exception:
+            continue  # e.g. structural requirements not caught by supports()
+        plans.append(order)
+    return plans
+
+
+def portfolio_search(
+    flow: Flow,
+    generations: int = 8,
+    population: int = 256,
+    elites: int = 16,
+    seed: int = 0,
+    seed_names: list[str] | None = None,
+    refine_k: int = 0,
+) -> tuple[list[int], float]:
+    """Seed a population from registered heuristics + random plans, then run
+    mutate-and-select generations with device-batched SCM evaluation.
+
+    ``seed_names`` picks the seeding portfolio from the optimizer registry
+    (default: every non-batched, non-exhaustive optimizer).  With
+    ``refine_k > 0`` the final population additionally goes through the
+    device block-move hill climb with that block-size cap.
+    """
+    rng = random.Random(seed)
+    from ..core.heuristics import random_plan
+
+    seeds = _seed_plans(flow, seed_names)
+    best_order: list[int] = seeds[0] if seeds else random_plan(flow, rng)
+    best_cost = np.inf
+    for o in seeds:  # exact f64 re-score: never return worse than a seed
+        c = scm(flow, o)
+        if c < best_cost:
+            best_cost, best_order = c, o
+    while len(seeds) < population:
+        seeds.append(random_plan(flow, rng))
+
+    cost_d = jnp.asarray(flow.cost)
+    sel_d = jnp.asarray(flow.sel)
+    pop = seeds[:population]
+    for _ in range(generations):
+        arr = jnp.asarray(np.array(pop, dtype=np.int32))
+        costs = np.asarray(scm_batch(cost_d, sel_d, arr))
+        idx = np.argsort(costs)
+        # device eval is f32; re-score the head of the ranking in f64 so the
+        # returned plan is never worse than its seeds by rounding alone.
+        for i in idx[: max(4, elites // 4)]:
+            exact = scm(flow, pop[i])
+            if exact < best_cost:
+                best_cost = exact
+                best_order = pop[i]
+        elite = [pop[i] for i in idx[:elites]]
+        nxt = list(elite)
+        while len(nxt) < population:
+            parent = elite[rng.randrange(len(elite))]
+            nxt.append(_mutate(parent, flow, rng, moves=rng.randint(1, 4)))
+        pop = nxt
+    if refine_k > 0:
+        refined, costs = hill_climb(flow, np.asarray(pop), k=refine_k)
+        i = int(np.argmin(costs))
+        if costs[i] < best_cost:
+            cand = [int(v) for v in refined[i]]
+            best_cost, best_order = scm(flow, cand), cand
+    assert flow.is_valid_order(best_order)
+    return best_order, scm(flow, best_order)

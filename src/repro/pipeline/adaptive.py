@@ -2,8 +2,10 @@
 
 Wraps an executor with the paper's optimizer: every ``reoptimize_every``
 batches the live ``FlowStats`` are turned into a ``core.Flow`` and the chosen
-algorithm (RO-III by default; ``portfolio`` uses the device-batched search)
-proposes a plan.  We switch only when the predicted SCM improvement exceeds
+algorithm proposes a plan.  Any optimizer registered in ``repro.optim`` can
+be selected by name — "ro3" (default), "portfolio"/"batched-ro3" for the
+device-batched searches, "dp"/"topsort" for exact plans on small flows, etc.
+We switch only when the predicted SCM improvement exceeds
 ``switch_threshold`` — plan churn has a (small) recompile cost in the fused
 path, so tiny predicted gains are ignored.
 
@@ -19,7 +21,7 @@ import numpy as np
 
 from ..core.cost import scm
 from ..core.flow import Flow
-from ..core.rank import ro3
+from ..optim import RegisteredOptimizer, resolve
 from .compile import FusedExecutor, HostExecutor
 from .ops import PipelineOp
 from .stats import FlowStats
@@ -29,23 +31,11 @@ __all__ = ["AdaptivePipeline"]
 Optimizer = Callable[[Flow], tuple[list[int], float]]
 
 
-def _portfolio(flow: Flow) -> tuple[list[int], float]:
-    from ..core.vectorized import portfolio_search
-
-    return portfolio_search(flow)
-
-
-_OPTIMIZERS: dict[str, Optimizer] = {
-    "ro3": ro3,
-    "portfolio": _portfolio,
-}
-
-
 class AdaptivePipeline:
     def __init__(
         self,
         ops: Sequence[PipelineOp],
-        optimizer: str | Optimizer = "ro3",
+        optimizer: str | RegisteredOptimizer | Optimizer = "ro3",
         reoptimize_every: int = 16,
         switch_threshold: float = 0.02,
         extra_edges: Sequence[tuple[int, int]] = (),
@@ -53,9 +43,7 @@ class AdaptivePipeline:
     ):
         self.ops = list(ops)
         self.stats = FlowStats(self.ops, extra_edges=extra_edges)
-        self.optimizer = (
-            _OPTIMIZERS[optimizer] if isinstance(optimizer, str) else optimizer
-        )
+        self.optimizer = resolve(optimizer)
         self.reoptimize_every = reoptimize_every
         self.switch_threshold = switch_threshold
         self.fused = fused

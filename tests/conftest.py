@@ -1,7 +1,11 @@
 import os
 import sys
 
-# Make `repro` importable when pytest is run without PYTHONPATH=src.
+# Make `repro` importable when pytest is run without PYTHONPATH=src, and the
+# repo root importable so tests can exercise the `benchmarks` package.
 sys.path.insert(
     0, os.path.join(os.path.dirname(__file__), "..", "src")
+)
+sys.path.insert(
+    0, os.path.join(os.path.dirname(__file__), "..")
 )

@@ -1,6 +1,7 @@
 """Exact optimizers (paper §4): mutual agreement + optimality."""
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # property tests need it; skip cleanly
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (

@@ -1,6 +1,7 @@
 """Approximate optimizers (paper §5): validity, improvement, delta math."""
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # property tests need it; skip cleanly
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (

@@ -1,6 +1,7 @@
 """Parallel plans (paper §6) and MIMO flows (paper §7)."""
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # property tests need it; skip cleanly
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (

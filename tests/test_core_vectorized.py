@@ -2,6 +2,7 @@
 import jax.numpy as jnp
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # property tests need it; skip cleanly
 from hypothesis import given, settings, strategies as st
 
 from repro.core import random_flow, random_plan, ro3, scm

@@ -1,0 +1,277 @@
+"""Unified optimizer engine: registry, adapters, device-batched substrate.
+
+Plain (non-hypothesis) property tests over `core.generators` flows, so this
+module runs even where `hypothesis` is unavailable.
+"""
+import random
+
+import numpy as np
+import pytest
+
+from repro import optim
+from repro.core import (
+    butterfly,
+    butterfly_mimo_segments,
+    case_study_flow,
+    dp,
+    optimize_mimo,
+    random_flow,
+    random_plan,
+    ro2,
+    ro3,
+    scm,
+)
+from repro.core.cost import PrefixState
+
+CORE_NAMES = (
+    "backtracking", "dp", "topsort",
+    "swap", "greedy1", "greedy2", "partition",
+    "kbz", "ro1", "ro2", "ro3",
+    "batched-ro3", "portfolio",
+)
+
+
+# ------------------------------------------------------------------ registry
+def test_registry_contents_and_tags():
+    names = optim.list_optimizers()
+    for expected in CORE_NAMES:
+        assert expected in names, expected
+    assert set(optim.list_optimizers(tags=(optim.BATCHABLE,))) == {
+        "batched-ro3",
+        "portfolio",
+    }
+    assert "dp" not in optim.list_optimizers(exclude=(optim.EXHAUSTIVE,))
+    for name in names:
+        opt = optim.get_optimizer(name)
+        # exactly one of exact/approximate
+        assert (optim.EXACT in opt.tags) != (optim.APPROXIMATE in opt.tags)
+    with pytest.raises(KeyError, match="unknown optimizer"):
+        optim.get_optimizer("no-such-algorithm")
+    with pytest.raises(ValueError, match="already registered"):
+        optim.register("ro3", lambda f: ([], 0.0))
+
+
+def test_plan_result_and_adapters_match_core():
+    f = case_study_flow()
+    for name, fn in (("dp", dp), ("ro2", ro2), ("ro3", ro3)):
+        res = optim.get_optimizer(name)(f)
+        _, cost = fn(f)
+        assert isinstance(res, optim.PlanResult)
+        assert res.scm == pytest.approx(cost, rel=1e-12)
+        assert f.is_valid_order(list(res.order))
+        assert res.wall_time_s >= 0.0
+        assert res.metadata["optimizer"] == name
+        order, c = res.as_tuple()
+        assert order == list(res.order) and c == res.scm
+
+
+def test_capability_gating():
+    big = random_flow(40, 0.4, rng=0)
+    assert not optim.get_optimizer("backtracking").supports(big)
+    assert not optim.get_optimizer("dp").supports(big)
+    assert optim.get_optimizer("ro3").supports(big)
+    chain = random_flow(6, 0.0, rng=1)  # no constraints => trivially a forest
+    assert optim.get_optimizer("kbz").supports(chain)
+
+
+def test_resolve_accepts_names_entries_and_legacy_callables():
+    f = random_flow(10, 0.3, rng=5)
+    by_name = optim.resolve("greedy1")(f)
+    by_entry = optim.resolve(optim.get_optimizer("greedy1"))(f)
+    by_callable = optim.resolve(lambda flow: optim.get_optimizer("greedy1")(flow))(f)
+    assert by_name == by_entry == by_callable
+
+
+# ------------------------------------------------- batched substrate (§Perf)
+def test_scm_batch_matches_core_scm_row_by_row():
+    import jax.numpy as jnp
+    from jax.experimental import enable_x64
+
+    for n, seed in ((5, 0), (12, 1), (23, 2), (40, 3)):
+        f = random_flow(n, 0.3, rng=seed)
+        orders = np.array([random_plan(f, s) for s in range(8)], dtype=np.int32)
+        want = np.array([scm(f, o) for o in orders])
+        got32 = np.asarray(
+            optim.scm_batch(
+                jnp.asarray(f.cost), jnp.asarray(f.sel), jnp.asarray(orders)
+            )
+        )
+        np.testing.assert_allclose(got32, want, rtol=2e-5)
+        with enable_x64():  # f64 on device reproduces the host values
+            got64 = np.asarray(
+                optim.scm_batch(
+                    jnp.asarray(f.cost, dtype=jnp.float64),
+                    jnp.asarray(f.sel, dtype=jnp.float64),
+                    jnp.asarray(orders),
+                )
+            )
+        np.testing.assert_allclose(got64, want, rtol=1e-12)
+
+
+def test_block_move_delta_batch_matches_prefix_state():
+    import jax.numpy as jnp
+    from jax.experimental import enable_x64
+
+    rng = random.Random(0)
+    for n, seed in ((8, 0), (15, 1), (26, 2)):
+        f = random_flow(n, 0.3, rng=seed)
+        orders = [random_plan(f, s) for s in range(6)]
+        triples = []
+        for _ in range(6):
+            s = rng.randrange(0, n - 2)
+            e = rng.randrange(s + 1, n)
+            t = rng.randrange(e, n + 1)
+            triples.append((s, e, t))
+        want = np.array(
+            [
+                [PrefixState(f, o).block_move_delta(s, e, t) for (s, e, t) in triples]
+                for o in orders
+            ]
+        )
+        with enable_x64():
+            S, WP = optim.prefix_arrays_batch(
+                jnp.asarray(f.cost, dtype=jnp.float64),
+                jnp.asarray(f.sel, dtype=jnp.float64),
+                jnp.asarray(np.array(orders, dtype=np.int32)),
+            )
+            got = np.stack(
+                [
+                    np.asarray(
+                        optim.block_move_delta_batch(
+                            S,
+                            WP,
+                            jnp.full((len(orders),), s, dtype=jnp.int32),
+                            jnp.full((len(orders),), e, dtype=jnp.int32),
+                            jnp.full((len(orders),), t, dtype=jnp.int32),
+                        )
+                    )
+                    for (s, e, t) in triples
+                ],
+                axis=1,
+            )
+        np.testing.assert_allclose(got, want, rtol=1e-12, atol=1e-12)
+
+
+def test_batched_ro3_matches_scalar_ro3_acceptance():
+    """Acceptance: batched RO-III refinement matches scalar `ro3` SCM within
+    1e-9 on >= 20 random generator flows, evaluating >= 256 candidate plans
+    per device call."""
+    B = 256
+    checked = 0
+    for n in (10, 14):
+        for i in range(10):
+            f = random_flow(n, 0.4, rng=1000 * n + i)
+            seed_order, _ = ro2(f)
+            rng = random.Random(i)
+            rows = [seed_order] + [random_plan(f, rng) for _ in range(B - 1)]
+            refined, costs = optim.hill_climb(f, np.asarray(rows), k=5)
+            assert refined.shape == (B, n)
+            _, c_ro3 = ro3(f)
+            # row 0 replays scalar RO-III's move policy from the same seed
+            c0 = scm(f, [int(v) for v in refined[0]])
+            assert c0 == pytest.approx(c_ro3, rel=1e-9)
+            assert costs[0] == pytest.approx(c_ro3, rel=1e-9)
+            # every refined row is a valid plan and no worse than its start
+            for r, c, start in zip(refined, costs, rows):
+                o = [int(v) for v in r]
+                assert f.is_valid_order(o)
+                assert c <= scm(f, start) + 1e-9
+            checked += 1
+    assert checked >= 20
+
+
+def test_population_hill_climb_never_worse_than_ro3():
+    for seed in range(3):
+        f = random_flow(20, 0.4, rng=seed)
+        order, cost = optim.population_hill_climb(f, population=64, seed=seed)
+        assert f.is_valid_order(order)
+        assert cost <= ro3(f)[1] + 1e-9
+
+
+def test_portfolio_seeds_from_registry():
+    f = random_flow(18, 0.4, rng=4)
+    # restricting the seed portfolio to one weak heuristic still works...
+    o1, c1 = optim.portfolio_search(
+        f, generations=2, population=32, seed=0, seed_names=["greedy1"]
+    )
+    assert f.is_valid_order(o1)
+    assert c1 <= scm(f, optim.get_optimizer("greedy1").raw(f)[0]) + 1e-9
+    # ...and the default portfolio is never worse than any registered seed
+    o2, c2 = optim.portfolio_search(f, generations=2, population=32, seed=0)
+    assert f.is_valid_order(o2)
+    assert c2 <= ro3(f)[1] + 1e-9
+    with pytest.raises(KeyError):
+        optim.portfolio_search(f, seed_names=["no-such-algorithm"])
+
+
+def test_portfolio_handles_tiny_flows():
+    # MIMO segments and pipeline sub-flows are routinely this small
+    for n in (1, 2, 3, 4):
+        f = random_flow(n, 0.0, rng=n)
+        order, cost = optim.portfolio_search(f, generations=2, population=16)
+        assert f.is_valid_order(order)
+        assert cost == pytest.approx(min(scm(f, o) for o in _all_orders(f)), rel=1e-9)
+
+
+def _all_orders(f):
+    import itertools
+
+    return [
+        list(p)
+        for p in itertools.permutations(range(f.n))
+        if f.is_valid_order(list(p))
+    ]
+
+
+# ------------------------------------------------------- consumers, by name
+def test_adaptive_pipeline_accepts_any_registered_name():
+    from repro.pipeline.adaptive import AdaptivePipeline
+    from repro.pipeline.case_study import (
+        case_study_extra_edges,
+        case_study_ops,
+        make_tweets,
+    )
+
+    for name in ("greedy1", "dp"):
+        ap = AdaptivePipeline(
+            case_study_ops(),
+            optimizer=name,
+            reoptimize_every=2,
+            extra_edges=case_study_extra_edges(),
+        )
+        for i in range(2):
+            ap.run(make_tweets(5_000, seed=i))
+        flow = ap.stats.to_flow()
+        assert flow.is_valid_order(ap.plan)
+
+
+def test_optimize_mimo_accepts_optimizer_names():
+    segs = butterfly_mimo_segments(4, 5, 0.3, rng=0)
+    costs = {}
+    for spec in ("swap", "ro3", ro3):
+        m = butterfly(butterfly_mimo_segments(4, 5, 0.3, rng=0))
+        before = m.total_cost()
+        after = optimize_mimo(m, spec)
+        key = spec if isinstance(spec, str) else "ro3-callable"
+        costs[key] = after
+        assert np.isfinite(after)
+        assert after <= before + 1e-9
+    assert costs["ro3"] == pytest.approx(costs["ro3-callable"], rel=1e-12)
+    # default optimizer is ro3 by name
+    m = butterfly(segs)
+    assert optimize_mimo(m) == pytest.approx(costs["ro3"], rel=1e-12)
+
+
+def test_benchmarks_enumerate_registry():
+    from benchmarks.bench_optimizers import run as bench_run
+    from benchmarks.run import BENCHES, QUICK_BENCHES
+
+    assert "optimizers" in BENCHES and "optimizers" in QUICK_BENCHES
+    rows = bench_run(reps=1, quick=True)
+    seen = {r["algo"] for r in rows}
+    # every registered optimizer that supports at least one sweep flow shows up
+    flows = [case_study_flow(), random_flow(15, 0.4, rng=15)]
+    for name in optim.list_optimizers():
+        opt = optim.get_optimizer(name)
+        if any(opt.supports(f) for f in flows):
+            assert name in seen, name
