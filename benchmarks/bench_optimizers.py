@@ -10,8 +10,16 @@ import inspect
 
 import numpy as np
 
+import time
+
 from repro.core import case_study_flow, random_flow, random_plan, scm
+from repro.core.parallel import pgreedy1, pgreedy2
 from repro.optim import STOCHASTIC, get_optimizer, list_optimizers
+
+# entries whose reported SCM is the execution DAG's scm_parallel, not the
+# linear SCM of the returned order — normalized_scm is comparable only
+# within one cost model, so every row carries its model explicitly
+PARALLEL_ALGOS = {"batched-pgreedy", "parallel-portfolio"}
 
 
 def _seed_kw(opt) -> str:
@@ -31,6 +39,24 @@ def run(reps: int = 3, quick: bool = False) -> list[dict]:
     rows = []
     for fname, f in _flows(quick):
         c0 = scm(f, random_plan(f, 0))
+        # scalar §6 baselines: not registry entries (they return DAGs, not
+        # orders) but the reference the batched parallel optimizers must beat
+        for pname, pfn in (("pgreedy1-scalar", pgreedy1), ("pgreedy2-scalar", pgreedy2)):
+            t0 = time.perf_counter()
+            _, pcost = pfn(f)
+            rows.append(
+                {
+                    "bench": "optimizers",
+                    "flow": fname,
+                    "n": f.n,
+                    "algo": pname,
+                    "scm": round(pcost, 4),
+                    "normalized_scm": round(pcost / c0, 4),
+                    "wall_ms": round((time.perf_counter() - t0) * 1e3, 2),
+                    "tags": "scalar-parallel-baseline",
+                    "cost_model": "parallel",
+                }
+            )
         for name in list_optimizers():
             opt = get_optimizer(name)
             if not opt.supports(f):
@@ -53,6 +79,9 @@ def run(reps: int = 3, quick: bool = False) -> list[dict]:
                         float(np.mean([r.wall_time_s for r in results])) * 1e3, 2
                     ),
                     "tags": "|".join(sorted(opt.tags)),
+                    "cost_model": (
+                        "parallel" if name in PARALLEL_ALGOS else "linear"
+                    ),
                 }
             )
     return rows

@@ -27,6 +27,7 @@ from .flow import Flow, ParallelPlan
 __all__ = [
     "scm",
     "scm_parallel",
+    "scm_parallel_masks",
     "PrefixState",
     "swap_delta",
     "block_move_delta",
@@ -45,22 +46,44 @@ def scm(flow: Flow, order: Sequence[int]) -> float:
     return total
 
 
+def scm_parallel_masks(
+    cost: np.ndarray,
+    sel: np.ndarray,
+    anc_masks: Sequence[int],
+    n_parents: Sequence[int],
+    mc: float = 0.0,
+) -> float:
+    """SCM of an execution DAG given its ancestor-mask encoding.
+
+    ``anc_masks[v]`` has bit j set iff task j is an ancestor of v in the DAG;
+    ``n_parents[v]`` is v's in-degree (>= 2 incurs one merge of cost ``mc``).
+    Selectivities multiply in ascending task-id order — the scalar reference
+    the device-batched ``optim.parallel_batch.scm_parallel_batch`` mirrors.
+    """
+    total = 0.0
+    for v in range(len(anc_masks)):
+        inp = 1.0
+        m = anc_masks[v]
+        while m:
+            j = (m & -m).bit_length() - 1
+            inp *= sel[j]
+            m &= m - 1
+        total += inp * cost[v]
+        if n_parents[v] >= 2:
+            total += inp * mc
+    return total
+
+
 def scm_parallel(plan: ParallelPlan, mc: float = 0.0) -> float:
     """SCM of a parallel plan with merge cost ``mc`` (paper §6)."""
     flow = plan.flow
-    anc = plan.ancestors_masks()
-    total = 0.0
-    for v in range(flow.n):
-        inp = 1.0
-        m = anc[v]
-        while m:
-            j = (m & -m).bit_length() - 1
-            inp *= flow.sel[j]
-            m &= m - 1
-        total += inp * flow.cost[v]
-        if len(plan.parents[v]) >= 2:
-            total += inp * mc
-    return total
+    return scm_parallel_masks(
+        flow.cost,
+        flow.sel,
+        plan.ancestors_masks(),
+        [len(p) for p in plan.parents],
+        mc=mc,
+    )
 
 
 class PrefixState:

@@ -273,3 +273,27 @@ class ParallelPlan:
             (anc[v] & self.flow.pred_mask[v]) == self.flow.pred_mask[v]
             for v in range(self.flow.n)
         )
+
+    def topological_order(self) -> list[int]:
+        """A linear extension of the execution DAG (Kahn, smallest-id ties)."""
+        n = self.flow.n
+        indeg = [len(self.parents[v]) for v in range(n)]
+        succ: list[list[int]] = [[] for _ in range(n)]
+        for v in range(n):
+            for p in self.parents[v]:
+                succ[p].append(v)
+        import heapq
+
+        ready = [v for v in range(n) if indeg[v] == 0]
+        heapq.heapify(ready)
+        out: list[int] = []
+        while ready:
+            u = heapq.heappop(ready)
+            out.append(u)
+            for w in succ[u]:
+                indeg[w] -= 1
+                if indeg[w] == 0:
+                    heapq.heappush(ready, w)
+        if len(out) != n:
+            raise ValueError("parallel plan contains a cycle")
+        return out

@@ -24,7 +24,15 @@ import numpy as np
 from .cost import scm_parallel
 from .flow import Flow, ParallelPlan
 
-__all__ = ["parallelize", "pgreedy1", "pgreedy2"]
+__all__ = [
+    "parallelize",
+    "pgreedy1",
+    "pgreedy2",
+    "grow_cuts",
+    "run_cuts",
+    "cuts_feasible",
+    "segments_to_plan",
+]
 
 
 def parallelize(flow: Flow, order: Sequence[int]) -> ParallelPlan:
@@ -58,6 +66,104 @@ def parallelize(flow: Flow, order: Sequence[int]) -> ParallelPlan:
         i = j
     plan = ParallelPlan(flow, parents)
     assert plan.is_valid()
+    return plan
+
+
+# ------------------------------------------------------- segmented plans
+# A *segmented* parallel plan is a linear order plus a 0/1 cut vector:
+# ``cuts[i] = 1`` starts a new segment at position i (``cuts[0]`` always 1).
+# A size-1 segment is a chain task; a size>=2 segment is a parallel run
+# fanning out from the previous segment's task, and the next (necessarily
+# singleton) segment merges the run's outputs — Algorithm 3's structure with
+# the cut points free instead of fixed at sel>1 run boundaries.  Feasibility:
+# no PC pair inside a segment (members must be mutually unordered) and no
+# two adjacent size>=2 segments (a run's merge point must be a single task).
+# This is the family the device-batched search in ``optim.parallel_batch``
+# hill-climbs over; these scalar helpers decode/validate its encoding.
+def grow_cuts(flow: Flow, order: Sequence[int], want_start, want_extend) -> list[int]:
+    """Segment-growing skeleton enforcing the family's feasibility rules.
+
+    Grows a segment from position i while ``want_extend(task)`` agrees, but
+    never across a PC edge into the segment, and never directly after a
+    size>=2 segment (a run's merge point must be a singleton) — so the
+    result always satisfies ``cuts_feasible`` by construction.
+    """
+    order = list(order)
+    n = len(order)
+    cuts = [1] * n
+    i = 0
+    prev_parallel = False  # last completed segment had size >= 2
+    while i < n:
+        j = i + 1
+        if not prev_parallel and want_start(order[i]):
+            members = {order[i]}
+            while (
+                j < n
+                and want_extend(order[j])
+                and not any(p in members for p in flow.preds(order[j]))
+            ):
+                cuts[j] = 0
+                members.add(order[j])
+                j += 1
+        prev_parallel = j - i >= 2
+        i = j
+    return cuts
+
+
+def run_cuts(flow: Flow, order: Sequence[int]) -> list[int]:
+    """Algorithm-3 style cut vector: group maximal runs of sel>1 tasks,
+    producing the same run structure ``parallelize`` fans out."""
+    sel_gt1 = lambda v: flow.sel[v] > 1.0  # noqa: E731
+    return grow_cuts(flow, order, sel_gt1, sel_gt1)
+
+
+def _segment_spans(cuts: Sequence[int]) -> list[tuple[int, int]]:
+    starts = [i for i, c in enumerate(cuts) if c] + [len(cuts)]
+    return list(zip(starts, starts[1:]))
+
+
+def cuts_feasible(flow: Flow, order: Sequence[int], cuts: Sequence[int]) -> bool:
+    """True iff (order, cuts) encodes a valid segmented parallel plan."""
+    if not cuts or not cuts[0]:
+        return False
+    order = list(order)
+    spans = _segment_spans(cuts)
+    prev_parallel = False
+    for a, b in spans:
+        if prev_parallel and b - a >= 2:
+            return False
+        members = order[a:b]
+        mset = set(members)
+        for v in members:
+            if b - a >= 2 and any(p in mset for p in flow.preds(v)):
+                return False
+        prev_parallel = b - a >= 2
+    return True
+
+
+def segments_to_plan(
+    flow: Flow, order: Sequence[int], cuts: Sequence[int]
+) -> ParallelPlan:
+    """Decode a feasible (order, cuts) pair into the explicit DAG.
+
+    With every cut set the plan degenerates to the linear chain; with the
+    ``run_cuts`` vector it reproduces ``parallelize``'s fan-out structure.
+    """
+    order = list(order)
+    n = len(order)
+    parents: list[set[int]] = [set() for _ in range(n)]
+    prev_members: list[int] = []
+    for a, b in _segment_spans(cuts):
+        members = order[a:b]
+        if b - a == 1:
+            parents[members[0]] = set(prev_members)
+        else:
+            anchor = {prev_members[-1]} if prev_members else set()
+            for v in members:
+                parents[v] = set(anchor)
+        prev_members = members
+    plan = ParallelPlan(flow, parents)
+    assert plan.is_valid(), "infeasible (order, cuts) encoding"
     return plan
 
 

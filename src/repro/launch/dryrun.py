@@ -41,6 +41,7 @@ def optimizer_dryrun() -> int:
     depend on the model/sharding modules.
     """
     from ..core.generators import case_study_flow, random_flow
+    from ..core.parallel import pgreedy2
     from ..optim import get_optimizer, list_optimizers
 
     flows = [
@@ -50,6 +51,8 @@ def optimizer_dryrun() -> int:
     failures = 0
     for fname, f in flows:
         print(f"# {fname}: n={f.n}, pc_density={f.pc_fraction():.0%}", flush=True)
+        _, scm_pg2 = pgreedy2(f)  # scalar §6 baseline for the batched entries
+        print(f"[ref]  pgreedy2-scalar scm={scm_pg2:10.3f}", flush=True)
         for name in list_optimizers():
             opt = get_optimizer(name)
             if not opt.supports(f):
@@ -69,6 +72,14 @@ def optimizer_dryrun() -> int:
             if not f.is_valid_order(list(r.order)):
                 failures += 1
                 print(f"[FAIL] {name}: invalid plan", file=sys.stderr)
+                continue
+            if name == "batched-pgreedy" and r.scm > scm_pg2 + 1e-9:
+                failures += 1
+                print(
+                    f"[FAIL] {name}: scm {r.scm:.3f} worse than scalar "
+                    f"pgreedy2 {scm_pg2:.3f}",
+                    file=sys.stderr,
+                )
                 continue
             print(
                 f"[ok]   {name:13s} scm={r.scm:10.3f} "

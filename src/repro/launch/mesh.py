@@ -10,7 +10,7 @@ from __future__ import annotations
 
 import jax
 
-__all__ = ["make_production_mesh", "make_host_mesh"]
+__all__ = ["make_production_mesh", "make_host_mesh", "make_abstract_mesh"]
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -22,3 +22,18 @@ def make_production_mesh(*, multi_pod: bool = False):
 def make_host_mesh():
     """Degenerate 1x1 mesh for CPU tests/examples (same axis names)."""
     return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def make_abstract_mesh(shape: tuple[int, ...], axes: tuple[str, ...]):
+    """AbstractMesh for spec-only code paths (no physical devices needed).
+
+    jax <= 0.4.37 constructs AbstractMesh from (name, size) pairs; newer
+    releases take positional (axis_sizes, axis_names).  Accept the modern
+    calling convention and translate as needed.
+    """
+    from jax.sharding import AbstractMesh
+
+    try:
+        return AbstractMesh(tuple(zip(axes, shape)))
+    except TypeError:
+        return AbstractMesh(tuple(shape), tuple(axes))

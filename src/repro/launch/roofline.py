@@ -95,6 +95,8 @@ def summarize(
     compiled, model_flops_global: float, n_chips: int
 ) -> dict:
     ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):  # jax <= 0.4.37: one dict per device
+        ca = ca[0] if ca else {}
     flops = float(ca.get("flops", 0.0))
     byts = float(ca.get("bytes accessed", 0.0))
     hlo = compiled.as_text()

@@ -15,7 +15,9 @@ import jax
 import jax.numpy as jnp
 
 from .config import ModelConfig
-from .layers import Sharder, identity_sharder, init_dense, rms_norm, rope
+from .layers import (
+    Sharder, identity_sharder, init_dense, rms_norm, rope, shard_map,
+)
 
 _NEG = -1e30
 
@@ -191,7 +193,7 @@ def sharded_decode_attention(
         out = o_g / jnp.maximum(l_g, 1e-30)
         return out.reshape(Bl, Hq, 1, v_l.shape[-1])
 
-    return jax.shard_map(
+    return shard_map(
         fn,
         mesh=mesh,
         in_specs=(
@@ -200,7 +202,7 @@ def sharded_decode_attention(
             P(batch_ax, None, "model", None),
         ),
         out_specs=P(batch_ax, None, None, None),
-        check_vma=False,
+        check=False,
     )(q, k, v).astype(q.dtype)
 
 

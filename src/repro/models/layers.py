@@ -17,6 +17,25 @@ def identity_sharder(x: jax.Array, *logical_axes: str | None) -> jax.Array:
     return x
 
 
+def shard_map(f, *, mesh, in_specs, out_specs, check: bool = False):
+    """``jax.shard_map`` across jax versions.
+
+    ``jax.shard_map`` (with its ``check_vma`` kwarg) landed after 0.4.37;
+    older releases expose ``jax.experimental.shard_map.shard_map`` with the
+    equivalent ``check_rep`` kwarg instead.
+    """
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            check_vma=check,
+        )
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    return _shard_map(
+        f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_rep=check
+    )
+
+
 def make_sharder(mesh, rules: dict[str, str | tuple[str, ...] | None]) -> Sharder:
     """Resolve logical axes -> mesh axes, dropping non-divisible ones."""
 
@@ -96,7 +115,11 @@ def rope(
 
 
 def init_dense(key, shape, scale: float | None = None, dtype=jnp.float32):
-    fan_in = shape[0] if len(shape) >= 2 else 1
+    # fan-in is the contracted dim (-2): for stacked per-layer/per-expert
+    # weights like (L, E, d, ff), shape[0] would be the layer count — scaling
+    # by L**-0.5 instead of d**-0.5 left MoE/SSM experts ~sqrt(d/L)x too hot
+    # (hidden states grew ~200x per MoE layer, sinking f32 decode parity).
+    fan_in = shape[-2] if len(shape) >= 2 else 1
     scale = scale if scale is not None else fan_in**-0.5
     return (jax.random.normal(key, shape, dtype=jnp.float32) * scale).astype(
         dtype

@@ -25,7 +25,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from .config import ModelConfig
-from .layers import Sharder, identity_sharder, init_dense
+from .layers import Sharder, identity_sharder, init_dense, shard_map
 
 __all__ = ["init_moe_params", "moe_apply"]
 
@@ -139,7 +139,7 @@ def moe_apply(
             # partial over the local ffn shard AND the local experts
             return jax.lax.psum(out, axis_name=("data", "model"))
 
-        routed = jax.shard_map(
+        routed = shard_map(
             serve_fn,
             mesh=mesh,
             in_specs=(
@@ -150,7 +150,7 @@ def moe_apply(
                 P("model", "data", None),
             ),
             out_specs=P(None, None),
-            check_vma=False,
+            check=False,
         )(xf, p["router"], p["wi_gate"], p["wi_up"], p["wo"])
     elif mesh is not None and "model" in mesh.shape and mesh.shape["model"] > 1:
         E_loc = m.num_experts // mesh.shape["model"]
@@ -171,7 +171,7 @@ def moe_apply(
             )
             return jax.lax.psum(out, axis_name="model")
 
-        routed = jax.shard_map(
+        routed = shard_map(
             shard_fn,
             mesh=mesh,
             in_specs=(
@@ -182,15 +182,18 @@ def moe_apply(
                 P("model", None, None),
             ),
             out_specs=P(dp_axes if dp_axes else None, None),
-            check_vma=False,
+            check=False,
         )(xf, p["router"], p["wi_gate"], p["wi_up"], p["wo"])
     else:
         weights, idx = _route(xf, p["router"], m.top_k)
-        cap = max(
-            int(B * S * m.top_k / m.num_experts * m.capacity_factor), 4
-        )
+        # Dropless (capacity = token count, the per-expert worst case):
+        # capacity dropping is non-causal — a token's keep/drop rank counts
+        # later positions and the cap varies with S — which breaks
+        # prefill/decode consistency.  DeepSeek-V3 routing is dropless; the
+        # distributed paths above keep capacity_factor, where the buffer
+        # would otherwise not fit and drops are the accepted trade.
         routed = _dispatch_ffn_combine(
-            xf, idx, weights, p["wi_gate"], p["wi_up"], p["wo"], 0, cap
+            xf, idx, weights, p["wi_gate"], p["wi_up"], p["wo"], 0, B * S
         )
 
     out = routed.reshape(B, S, d)

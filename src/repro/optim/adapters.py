@@ -8,7 +8,7 @@ from __future__ import annotations
 
 from ..core import exact, heuristics, rank
 from ..core.flow import Flow
-from . import batched
+from . import batched, parallel_batch
 from .api import (
     APPROXIMATE,
     BATCHABLE,
@@ -125,4 +125,26 @@ register(
     tags={APPROXIMATE, HANDLES_CONSTRAINTS, BATCHABLE, STOCHASTIC},
     doc="Registry-seeded portfolio + mutate-and-select generations with "
     "device-batched SCM evaluation.",
+)
+
+# ------------------------------------- parallel plans, §6 (device-batched)
+# These optimize the paper's *parallel* cost model: the returned order is a
+# linear extension of the winning execution DAG and the reported SCM is the
+# DAG's scm_parallel (<= the order's linear SCM); consumers that execute
+# plans linearly re-score with core.cost.scm before switching (see
+# pipeline.adaptive).
+register(
+    "batched-pgreedy",
+    parallel_batch.batched_pgreedy,
+    tags={APPROXIMATE, HANDLES_CONSTRAINTS, BATCHABLE},
+    doc="Greedy repartition of a population of (order, partition) pairs in "
+    "one vmapped device call; the scalar PGreedyI/II and Algorithm-3 DAGs "
+    "ride in the candidate pool, so it is never worse than pgreedy2 (§6.1).",
+)
+register(
+    "parallel-portfolio",
+    parallel_batch.parallel_portfolio,
+    tags={APPROXIMATE, HANDLES_CONSTRAINTS, BATCHABLE, STOCHASTIC},
+    doc="Registry-seeded orders x {linear, Algorithm-3, random} partitions, "
+    "device cut hill-climb + elite order mutation per generation (§6).",
 )

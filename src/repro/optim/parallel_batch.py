@@ -1,0 +1,437 @@
+"""Device-batched parallel-plan (§6) substrate (EXPERIMENTS.md §Perf).
+
+PR 1 batched *linear* plan search; this module extends the substrate to the
+paper's parallel execution DAGs so hundreds of candidate (order, partition)
+pairs evaluate per device call:
+
+* ``scm_parallel_batch`` — SCM of a population of arbitrary execution DAGs
+  from a padded array encoding (ancestor matrix + merge flags).  Mirrors the
+  scalar ``core.cost.scm_parallel_masks`` term for term: in float64 the two
+  agree to full precision (the parity test budgets 1e-9).
+* ``scm_segmented_batch`` / ``cut_climb_batch`` — the *segmented* plan
+  family of ``core.parallel`` (linear order + cut vector, Algorithm 3 with
+  free cut points) has a closed-form SCM from per-segment prefix arrays:
+
+      SCM = sum_i S[a(i)] * c_i  +  mc * sum_{merge heads} S[a(head)]
+
+  with S the exclusive selectivity prefix product over the order and a(i)
+  the start of i's segment — so a whole population of cut vectors is two
+  gathers and a cummax, and a greedy repartition (flip the best cut point,
+  repeat to fixpoint) vmaps over the population the way the RO-III block
+  move pass does in ``optim.batched``.  This generalizes the spirit of
+  ``core.parallel._best_cut`` — choose the input cut that minimizes volume —
+  from one task appended at a time to all cut points of all plans at once.
+* ``batched_pgreedy`` / ``parallel_portfolio`` — registry entries built on
+  the two kernels.  ``batched_pgreedy`` always evaluates the scalar
+  PGreedyI/II and Algorithm-3 DAGs in its candidate pool (device-batched),
+  so it is never worse than ``pgreedy2``; the portfolio seeds orders from
+  the optimizer registry and mutates between climb rounds.
+"""
+from __future__ import annotations
+
+import functools
+import random
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import enable_x64
+
+from ..core.cost import scm_parallel
+from ..core.flow import Flow, ParallelPlan
+from ..core.parallel import (
+    cuts_feasible,
+    grow_cuts,
+    parallelize,
+    pgreedy1,
+    pgreedy2,
+    run_cuts,
+    segments_to_plan,
+)
+from .batched import _mutate, _seed_plans, pred_matrix
+
+__all__ = [
+    "scm_parallel_batch",
+    "scm_segmented_batch",
+    "cut_climb_batch",
+    "encode_plans",
+    "scm_parallel_population",
+    "segmented_scm",
+    "cut_search",
+    "batched_pgreedy",
+    "parallel_portfolio",
+]
+
+_IMPROVE_EPS = -1e-12  # same strict-improvement threshold as optim.batched
+
+
+# ------------------------------------------------------------ DAG population
+@jax.jit
+def scm_parallel_batch(
+    cost: jax.Array,  # (n,)
+    sel: jax.Array,  # (n,)
+    anc: jax.Array,  # (B, n, n) bool: anc[b, v, j] = j is an ancestor of v
+    merge: jax.Array,  # (B, n) bool: v has in-degree >= 2
+    mc: jax.Array,  # scalar merge cost
+) -> jax.Array:
+    """SCM of each encoded DAG; see ``core.cost.scm_parallel_masks``.
+
+    Multiplying by an exact 1.0 is exact, so the per-task input volume
+    ``prod(where(anc, sel, 1))`` rounds identically to the scalar loop over
+    ascending ancestor ids; the merge-term fusion and sum reduction order
+    can still differ from the scalar accumulation by ~1 ulp when mc != 0 —
+    compare with a tolerance (the parity tests budget 1e-9), not equality.
+    """
+    inp = jnp.prod(jnp.where(anc, sel[None, None, :], 1.0), axis=-1)  # (B, n)
+    return jnp.sum(inp * (cost[None, :] + mc * merge), axis=-1)
+
+
+def _segment_eval(c, s, M, cuts, mc):
+    """(SCM, feasible) of cut-vector candidates over one gathered order.
+
+    ``c``/``s`` are (n,) cost/sel in order positions, ``M`` the (n, n)
+    position-level precedence conflicts; ``cuts`` is (..., n) bool and the
+    outputs carry its leading shape.  Feasibility mirrors
+    ``core.parallel.cuts_feasible``: position 0 must start a segment, no PC
+    pair inside a segment, no two adjacent size>=2 segments.
+    """
+    n = c.shape[-1]
+    pos = jnp.arange(n, dtype=jnp.int32)
+    ok0 = cuts[..., 0]  # a missing leading cut is infeasible, not repaired
+    cuts = cuts.at[..., 0].set(True)
+    Sex = jnp.concatenate(
+        [jnp.ones_like(s[..., :1]), jnp.cumprod(s[..., :-1], axis=-1)], -1
+    )
+    astart = jax.lax.cummax(
+        jnp.where(cuts, pos, 0), axis=cuts.ndim - 1  # lax: no negative axes
+    )  # (..., n)
+    S_seg = Sex[astart]  # per-position segment input volume
+    prev_start = jnp.concatenate(
+        [jnp.zeros_like(astart[..., :1]), astart[..., :-1]], -1
+    )
+    merge = cuts & (pos > 0) & (pos - prev_start >= 2)
+    total = jnp.sum(S_seg * c + mc * jnp.where(merge, S_seg, 0.0), axis=-1)
+    same = astart[..., :, None] == astart[..., None, :]
+    intra_bad = jnp.any(M & same, axis=(-2, -1))
+    par = jnp.sum(same, axis=-1) >= 2  # position sits in a size>=2 segment
+    alt_bad = jnp.any(cuts[..., 1:] & par[..., 1:] & par[..., :-1], axis=-1)
+    return total, ok0 & ~(intra_bad | alt_bad)
+
+
+def _gather_row(cost, sel, pred, order):
+    c = cost[order]
+    s = sel[order]
+    M = pred[order[:, None], order[None, :]]
+    return c, s, M
+
+
+@jax.jit
+def scm_segmented_batch(
+    cost: jax.Array,
+    sel: jax.Array,
+    pred: jax.Array,  # (n, n) bool precedence closure
+    orders: jax.Array,  # (B, n) int32
+    cuts: jax.Array,  # (B, n) bool
+    mc: jax.Array,
+) -> tuple[jax.Array, jax.Array]:
+    """(SCM, feasible) per (order, cuts) row of a segmented-plan population."""
+
+    def row(order, cut):
+        c, s, M = _gather_row(cost, sel, pred, order)
+        return _segment_eval(c, s, M, cut, mc)
+
+    return jax.vmap(row)(orders, cuts)
+
+
+def _cut_climb_row(cost, sel, pred, order, cuts0, mc, *, max_steps: int):
+    """Greedy repartition of one row: flip the best-improving cut point,
+    repeat to a fixpoint.  Designed to be vmapped over a population."""
+    n = order.shape[0]
+    c, s, M = _gather_row(cost, sel, pred, order)
+    eye = jnp.eye(n, dtype=bool)
+    best0, feas0 = _segment_eval(c, s, M, cuts0, mc)
+    best0 = jnp.where(feas0, best0, jnp.inf)
+
+    def body(st):
+        flips = st["cuts"][None, :] ^ eye  # candidate i flips cut point i
+        totals, feas = _segment_eval(c, s, M, flips, mc)
+        totals = jnp.where(feas, totals, jnp.inf)
+        i = jnp.argmin(totals)
+        improved = totals[i] < st["best"] + _IMPROVE_EPS
+        return {
+            "cuts": jnp.where(improved, flips[i], st["cuts"]),
+            "best": jnp.where(improved, totals[i], st["best"]),
+            "steps": st["steps"] + 1,
+            "done": ~improved | (st["steps"] + 1 >= max_steps),
+        }
+
+    def guarded_body(st):
+        new = body(st)
+        # vmapped while_loop applies the body to finished rows too: freeze
+        return jax.tree.map(lambda a, b: jnp.where(st["done"], a, b), st, new)
+
+    init = {
+        "cuts": cuts0.at[0].set(True),
+        "best": best0,
+        "steps": jnp.asarray(0, jnp.int32),
+        "done": jnp.asarray(False),
+    }
+    out = jax.lax.while_loop(lambda st: ~st["done"], guarded_body, init)
+    return out["cuts"], out["best"]
+
+
+@functools.partial(jax.jit, static_argnames=("max_steps",))
+def cut_climb_batch(
+    cost: jax.Array,
+    sel: jax.Array,
+    pred: jax.Array,
+    orders: jax.Array,  # (B, n)
+    cuts: jax.Array,  # (B, n) bool starting partitions
+    mc: jax.Array,
+    max_steps: int = 64,
+) -> tuple[jax.Array, jax.Array]:
+    """Greedy-repartition every row; returns (refined cuts, their SCMs).
+
+    Rows whose start is infeasible recover on the first flip that reaches a
+    feasible partition (infeasible candidates score inf); rows that stay
+    infeasible return inf and are discarded by the host wrappers.
+    """
+    row = functools.partial(
+        _cut_climb_row, cost, sel, pred, mc=mc, max_steps=max_steps
+    )
+    return jax.vmap(row)(orders, cuts)
+
+
+# ------------------------------------------------------------- host wrappers
+def encode_plans(
+    flow: Flow, plans: "list[ParallelPlan]"
+) -> tuple[np.ndarray, np.ndarray]:
+    """Pack ParallelPlans into the padded (B, n, n) + (B, n) array encoding."""
+    n = flow.n
+    anc = np.zeros((len(plans), n, n), dtype=bool)
+    merge = np.zeros((len(plans), n), dtype=bool)
+    for b, plan in enumerate(plans):
+        for v, m in enumerate(plan.ancestors_masks()):
+            while m:
+                j = (m & -m).bit_length() - 1
+                anc[b, v, j] = True
+                m &= m - 1
+            merge[b, v] = len(plan.parents[v]) >= 2
+    return anc, merge
+
+
+def scm_parallel_population(
+    flow: Flow, plans: "list[ParallelPlan]", mc: float = 0.0
+) -> np.ndarray:
+    """Device-evaluate a population of parallel plans in one call (f64)."""
+    anc, merge = encode_plans(flow, plans)
+    with enable_x64():
+        out = scm_parallel_batch(
+            jnp.asarray(flow.cost, dtype=jnp.float64),
+            jnp.asarray(flow.sel, dtype=jnp.float64),
+            jnp.asarray(anc),
+            jnp.asarray(merge),
+            jnp.asarray(mc, dtype=jnp.float64),
+        )
+        return np.asarray(out)
+
+
+def segmented_scm(
+    flow: Flow, orders, cuts, mc: float = 0.0
+) -> tuple[np.ndarray, np.ndarray]:
+    """(SCM, feasible) of (order, cuts) rows, f64 on device."""
+    with enable_x64():
+        total, feas = scm_segmented_batch(
+            jnp.asarray(flow.cost, dtype=jnp.float64),
+            jnp.asarray(flow.sel, dtype=jnp.float64),
+            jnp.asarray(pred_matrix(flow)),
+            jnp.asarray(np.asarray(orders, dtype=np.int32)),
+            jnp.asarray(np.asarray(cuts, dtype=bool)),
+            jnp.asarray(mc, dtype=jnp.float64),
+        )
+        return np.asarray(total), np.asarray(feas)
+
+
+def cut_search(
+    flow: Flow, orders, cuts, mc: float = 0.0, max_steps: int | None = None
+) -> tuple[np.ndarray, np.ndarray]:
+    """Greedy-repartition a population of (order, cuts) rows (f64 device)."""
+    arr_o = np.asarray(orders, dtype=np.int32)
+    arr_c = np.asarray(cuts, dtype=bool)
+    if arr_o.ndim != 2 or arr_o.shape[1] != flow.n or arr_c.shape != arr_o.shape:
+        raise ValueError(
+            f"orders/cuts must be (B, {flow.n}); got {arr_o.shape}/{arr_c.shape}"
+        )
+    if max_steps is None:
+        max_steps = 4 * flow.n + 8
+    with enable_x64():
+        out_cuts, out_scm = cut_climb_batch(
+            jnp.asarray(flow.cost, dtype=jnp.float64),
+            jnp.asarray(flow.sel, dtype=jnp.float64),
+            jnp.asarray(pred_matrix(flow)),
+            jnp.asarray(arr_o),
+            jnp.asarray(arr_c),
+            jnp.asarray(mc, dtype=jnp.float64),
+            max_steps=max_steps,
+        )
+        return np.asarray(out_cuts), np.asarray(out_scm)
+
+
+# ------------------------------------------------------- registry optimizers
+def _random_feasible_cuts(
+    flow: Flow, order: list[int], rng: random.Random
+) -> list[int]:
+    """A random cut vector, feasible by ``grow_cuts`` construction."""
+    return grow_cuts(
+        flow, order, lambda v: True, lambda v: rng.random() < 0.5
+    )
+
+
+def _seed_orders(
+    flow: Flow,
+    rng: random.Random,
+    count: int,
+    names: "list[str] | None" = None,
+):
+    """Distinct linear orders from registered optimizers (``names``, or
+    every non-batched non-exhaustive entry), topped up with random valid
+    plans.  Attempt-bounded: a heavily constrained flow may have fewer
+    distinct linear extensions than ``count``."""
+    from ..core.heuristics import random_plan
+
+    orders: list[list[int]] = []
+    seen: set[tuple[int, ...]] = set()
+
+    def add(order: list[int]) -> None:
+        key = tuple(order)
+        if key not in seen:
+            seen.add(key)
+            orders.append(order)
+
+    for order in _seed_plans(flow, names):
+        add(order)
+    for _ in range(20 * count):
+        if len(orders) >= count:
+            break
+        add(random_plan(flow, rng))
+    if not orders:
+        orders.append(random_plan(flow, rng))
+    return orders
+
+
+def _best_segmented(
+    flow: Flow,
+    rows: "list[tuple[list[int], list[int]]]",
+    mc: float,
+) -> tuple[list[int], list[int], float]:
+    """Cut-climb the (order, cuts) rows on device; exact-rescore the winner."""
+    orders = np.asarray([o for o, _ in rows], dtype=np.int32)
+    cuts = np.asarray([c for _, c in rows], dtype=bool)
+    out_cuts, out_scm = cut_search(flow, orders, cuts, mc=mc)
+    i = int(np.argmin(out_scm))
+    order = [int(v) for v in orders[i]]
+    cut = [int(v) for v in out_cuts[i]]
+    assert cuts_feasible(flow, order, cut)
+    # f64 exact re-score through the explicit DAG: the returned cost is the
+    # scalar scm_parallel of the decoded plan, never the device value alone
+    exact = scm_parallel(segments_to_plan(flow, order, cut), mc=mc)
+    return order, cut, float(exact)
+
+
+def batched_pgreedy(
+    flow: Flow,
+    mc: float = 0.0,
+    population: int = 64,
+    seed: int = 0,
+) -> tuple[list[int], float]:
+    """Population-batched §6 search over (order, partition) pairs.
+
+    Seeds orders from the rank-ordering family, pairs each with linear /
+    Algorithm-3 / random partitions, greedy-repartitions the whole
+    population in one device call, and evaluates the scalar PGreedyI/II and
+    Algorithm-3 DAGs batched alongside — so the result is never worse than
+    ``pgreedy2`` (its plan is in the candidate pool).  Returns (topological
+    order of the winning DAG, its parallel SCM).
+    """
+    rng = random.Random(seed)
+    orders = _seed_orders(
+        flow, rng, max(4, population // 8),
+        names=["ro2", "ro3", "greedy1", "greedy2"],
+    )
+    rows: list[tuple[list[int], list[int]]] = []
+    for order in orders:
+        rows.append((order, [1] * flow.n))
+        rows.append((order, run_cuts(flow, order)))
+    while len(rows) < population:
+        order = orders[rng.randrange(len(orders))]
+        rows.append((order, _random_feasible_cuts(flow, order, rng)))
+    order, cut, best = _best_segmented(flow, rows[:population], mc)
+
+    # general-DAG candidates the segmented family cannot express
+    plans = [pgreedy1(flow, mc=mc)[0], pgreedy2(flow, mc=mc)[0]]
+    plans += [parallelize(flow, o) for o in orders[:4]]
+    costs = scm_parallel_population(flow, plans, mc=mc)
+    j = int(np.argmin(costs))
+    if costs[j] < best:
+        plan = plans[j]
+        best = scm_parallel(plan, mc=mc)  # exact f64 host re-score
+        return plan.topological_order(), float(best)
+    return order, float(best)
+
+
+def parallel_portfolio(
+    flow: Flow,
+    mc: float = 0.0,
+    generations: int = 3,
+    population: int = 128,
+    elites: int = 16,
+    seed: int = 0,
+    seed_names: "list[str] | None" = None,
+) -> tuple[list[int], float]:
+    """Registry-seeded portfolio over the segmented parallel-plan family.
+
+    Orders come from every registered non-batched optimizer (or
+    ``seed_names``), partitions from linear / Algorithm-3 / random cuts;
+    each generation greedy-repartitions the population on device, keeps the
+    elite (order, cuts) rows and mutates elite orders with the RO-III block
+    move set.  Returns (order of the best DAG found, its parallel SCM).
+    """
+    rng = random.Random(seed)
+    seeds = _seed_orders(flow, rng, max(4, population // 4), names=seed_names)
+
+    def expand(orders: "list[list[int]]") -> "list[tuple[list[int], list[int]]]":
+        rows = []
+        for o in orders:
+            rows.append((o, [1] * flow.n))
+            rows.append((o, run_cuts(flow, o)))
+            rows.append((o, _random_feasible_cuts(flow, o, rng)))
+        while len(rows) < population:
+            o = orders[rng.randrange(len(orders))]
+            rows.append((o, _random_feasible_cuts(flow, o, rng)))
+        return rows[:population]
+
+    best_order: list[int] | None = None
+    best_cost = np.inf
+    orders = seeds
+    for _ in range(max(1, generations)):
+        rows = expand(orders)
+        arr_o = np.asarray([o for o, _ in rows], dtype=np.int32)
+        arr_c = np.asarray([c for _, c in rows], dtype=bool)
+        out_cuts, out_scm = cut_search(flow, arr_o, arr_c, mc=mc)
+        idx = np.argsort(out_scm)
+        for i in idx[:4]:  # exact f64 re-score of the head of the ranking
+            if not np.isfinite(out_scm[i]):
+                continue
+            o = [int(v) for v in arr_o[i]]
+            cut = [int(v) for v in out_cuts[i]]
+            exact = scm_parallel(segments_to_plan(flow, o, cut), mc=mc)
+            if exact < best_cost:
+                best_cost, best_order = exact, o
+        elite = [[int(v) for v in arr_o[i]] for i in idx[:elites]]
+        nxt = list(elite)
+        while len(nxt) < max(4, population // 4):
+            parent = elite[rng.randrange(len(elite))]
+            nxt.append(_mutate(parent, flow, rng, moves=rng.randint(1, 4)))
+        orders = nxt
+    assert best_order is not None and flow.is_valid_order(best_order)
+    return best_order, float(best_cost)

@@ -44,6 +44,17 @@ class AdaptivePipeline:
         self.ops = list(ops)
         self.stats = FlowStats(self.ops, extra_edges=extra_edges)
         self.optimizer = resolve(optimizer)
+        # registry entries carry structural guards (max_n, supports); honor
+        # them like every other consumer so e.g. "dp" on a 25-op pipeline
+        # skips re-optimization instead of hanging in a 2^25 enumeration
+        if isinstance(optimizer, str):
+            from ..optim import get_optimizer
+
+            self._supports = get_optimizer(optimizer).supports
+        elif isinstance(optimizer, RegisteredOptimizer):
+            self._supports = optimizer.supports
+        else:
+            self._supports = lambda _flow: True
         self.reoptimize_every = reoptimize_every
         self.switch_threshold = switch_threshold
         self.fused = fused
@@ -67,8 +78,15 @@ class AdaptivePipeline:
 
     def maybe_reoptimize(self) -> bool:
         flow = self.stats.to_flow()
+        if not self._supports(flow):
+            return False  # keep the current plan; the optimizer can't scale
         current = scm(flow, self.plan)
-        proposed, cost = self.optimizer(flow)
+        proposed, _ = self.optimizer(flow)
+        # Re-score with the *linear* SCM: parallel optimizers (batched-pgreedy,
+        # parallel-portfolio) report their DAG's scm_parallel, but this
+        # executor runs plans linearly — comparing the reported cost against
+        # `current` would overstate the gain and churn plans for nothing.
+        cost = scm(flow, proposed)
         if cost < current * (1.0 - self.switch_threshold):
             self.plan = proposed
             self.plan_history.append((self.batches_seen, list(proposed), cost))

@@ -16,6 +16,7 @@ would guarantee that re-ordering never changes results.
 from __future__ import annotations
 
 import dataclasses
+import zlib
 from typing import Callable
 
 import jax
@@ -114,7 +115,10 @@ def lookup_op(
     est_cost: float = 2.0,
 ) -> PipelineOp:
     """Hash-lookup into a static table of ``table_size`` rows (gather)."""
-    key = jax.random.PRNGKey(hash(name) % (2**31))
+    # crc32, not hash(): table contents must not vary with PYTHONHASHSEED —
+    # pipeline outputs are compared across processes (drivers, subprocess
+    # dry-runs, restored checkpoints).
+    key = jax.random.PRNGKey(zlib.crc32(name.encode()) % (2**31))
     table = jax.random.randint(key, (table_size,), 0, 2**20, dtype=jnp.int32)
 
     def fn(fields: Fields):
@@ -136,7 +140,7 @@ def multi_lookup_op(
 ) -> PipelineOp:
     """Hash-lookup keyed on several fields combined (paper's Sales/Campaign
     lookups are keyed on region x product x date)."""
-    key = jax.random.PRNGKey(hash(name) % (2**31))
+    key = jax.random.PRNGKey(zlib.crc32(name.encode()) % (2**31))
     table = jax.random.randint(key, (table_size,), 0, 2**20, dtype=jnp.int32)
 
     def fn(fields: Fields):

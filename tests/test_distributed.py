@@ -23,9 +23,9 @@ KEY = jax.random.PRNGKey(0)
 def _mesh_16x16_abstract():
     """AbstractMesh stands in for the production mesh in spec-only tests
     (no 256 host devices needed)."""
-    from jax.sharding import AbstractMesh
+    from repro.launch.mesh import make_abstract_mesh
 
-    return AbstractMesh((16, 16), ("data", "model"))
+    return make_abstract_mesh((16, 16), ("data", "model"))
 
 
 @pytest.mark.parametrize("arch", [

@@ -28,6 +28,7 @@ CORE_NAMES = (
     "swap", "greedy1", "greedy2", "partition",
     "kbz", "ro1", "ro2", "ro3",
     "batched-ro3", "portfolio",
+    "batched-pgreedy", "parallel-portfolio",
 )
 
 
@@ -39,6 +40,8 @@ def test_registry_contents_and_tags():
     assert set(optim.list_optimizers(tags=(optim.BATCHABLE,))) == {
         "batched-ro3",
         "portfolio",
+        "batched-pgreedy",
+        "parallel-portfolio",
     }
     assert "dp" not in optim.list_optimizers(exclude=(optim.EXHAUSTIVE,))
     for name in names:

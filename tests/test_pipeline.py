@@ -113,3 +113,35 @@ def test_loader_shapes_and_exact_resume():
     ld2.load_state_dict(state)
     b2r = ld2.next_batch()
     assert np.array_equal(b2["tokens"], b2r["tokens"])
+
+
+def test_pipeline_outputs_stable_across_hash_seeds():
+    """Lookup tables are seeded with crc32(name), not hash(name): two
+    processes with different PYTHONHASHSEED must produce identical outputs
+    (regression for the process-dependent pipeline results ROADMAP item)."""
+    import os
+    import subprocess
+    import sys
+
+    prog = (
+        "import json, numpy as np\n"
+        "from repro.pipeline import HostExecutor\n"
+        "from repro.pipeline.case_study import case_study_ops, make_tweets\n"
+        "ops = case_study_ops()\n"
+        "out = HostExecutor(ops).run(make_tweets(2_000, seed=3),"
+        " list(range(len(ops))))\n"
+        "digest = {k: [float(np.sum(np.asarray(v, np.float64))), list(v.shape)]\n"
+        "          for k, v in sorted(out.items())}\n"
+        "print(json.dumps(digest, sort_keys=True))\n"
+    )
+    outs = []
+    for hash_seed in ("0", "4242"):
+        env = {**os.environ, "PYTHONHASHSEED": hash_seed,
+               "PYTHONPATH": os.pathsep.join(sys.path)}
+        r = subprocess.run(
+            [sys.executable, "-c", prog], env=env,
+            capture_output=True, text=True, timeout=300,
+        )
+        assert r.returncode == 0, r.stderr[-2000:]
+        outs.append(r.stdout.strip().splitlines()[-1])
+    assert outs[0] == outs[1]
