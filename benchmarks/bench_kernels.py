@@ -1,16 +1,35 @@
 """Kernel-level validation of the paper's model (beyond-paper).
 
-filter_chain's block-early-exit makes expected per-block predicate work an
-SCM with block-level selectivities; we count actually-evaluated predicates
-per ordering (simulated exactly from the data) and compare optimizer-chosen
-vs authored vs worst orderings.  Flash-attention numbers are interpret-mode
-correctness + the analytic VMEM tile sizes used by the BlockSpecs.
+Three cases share one row schema (optimized / baseline / worst + a note):
+
+* ``kernel_filter_chain`` — filter_chain's block-early-exit makes expected
+  per-block predicate work an SCM with block-level selectivities; we count
+  actually-evaluated predicates per ordering (simulated exactly from the
+  data) and compare optimizer-chosen vs authored vs worst orderings.
+* ``kernel_flash_tiles`` — interpret-mode correctness lives in the tests;
+  here the analytic VMEM tile budget of the BlockSpecs.
+* ``kernel_block_move`` — the fused Pallas RO-III sweep vs the vmapped
+  state machine (`optim.batched.block_move_pass_batch`): both reach the
+  identical fixpoint (same move policy), so the comparison is *device
+  passes* (while-loop steps; the vmapped machine pays one per (size, start)
+  probe, the kernel one per accepted move) and warm wall-clock.
 """
 from __future__ import annotations
 
+import random
+import time
+
 import numpy as np
 
-from repro.core import Flow, ro3, scm
+from repro.core import Flow, random_flow, random_plan, ro2, ro3, scm
+from repro.optim import batched
+
+
+def _row(bench, rep, case, optimized, baseline, worst, note):
+    return {
+        "bench": bench, "rep": rep, "case": case, "optimized": optimized,
+        "baseline": baseline, "worst": worst, "note": note,
+    }
 
 
 def _block_evals(mask_per_pred: np.ndarray, order, block: int) -> int:
@@ -27,9 +46,8 @@ def _block_evals(mask_per_pred: np.ndarray, order, block: int) -> int:
     return evals
 
 
-def run(reps: int = 5, n_rows: int = 65_536, block: int = 1024) -> list[dict]:
+def _filter_chain_case(rows, reps: int, n_rows: int, block: int) -> None:
     rng = np.random.default_rng(0)
-    rows = []
     for rep in range(reps):
         K = 6
         sels = rng.uniform(0.05, 0.9, size=K)
@@ -43,19 +61,72 @@ def run(reps: int = 5, n_rows: int = 65_536, block: int = 1024) -> list[dict]:
         e_opt = _block_evals(mask_per_pred, opt_order, block)
         e_naive = _block_evals(mask_per_pred, naive, block)
         e_worst = _block_evals(mask_per_pred, worst, block)
-        rows.append(
-            {"bench": "kernel_filter_chain", "rep": rep,
-             "evals_optimized": e_opt, "evals_authored": e_naive,
-             "evals_worst": e_worst,
-             "saving_vs_worst": round(1 - e_opt / e_worst, 4)}
-        )
-    # flash attention tile accounting (BlockSpec VMEM budget)
+        rows.append(_row(
+            "kernel_filter_chain", rep, f"K=6_rows={n_rows}",
+            e_opt, e_naive, e_worst,
+            f"saving_vs_worst={1 - e_opt / e_worst:.4f}",
+        ))
+
+
+def _flash_tiles_case(rows) -> None:
     bq, bk, d = 128, 128, 128
     vmem = (bq * d + 2 * bk * d + bq * d + 2 * bq) * 4  # q,k,v,acc,m,l f32
-    rows.append(
-        {"bench": "kernel_flash_tiles", "rep": 0,
-         "evals_optimized": f"bq={bq}", "evals_authored": f"bk={bk}",
-         "evals_worst": f"d={d}",
-         "saving_vs_worst": f"{vmem/2**20:.2f}MiB_VMEM"}
-    )
+    rows.append(_row(
+        "kernel_flash_tiles", 0, f"bq={bq}_bk={bk}_d={d}",
+        f"{vmem / 2**20:.2f}MiB", "16MiB_VMEM", "-", "BlockSpec_budget",
+    ))
+
+
+def _timed(fn):
+    out = fn()  # warm-up / compile
+    t0 = time.perf_counter()
+    out = fn()
+    return out, time.perf_counter() - t0
+
+
+def _block_move_case(rows, reps: int, population: int = 64) -> None:
+    for rep, (n, pc) in enumerate(((20, 0.4), (40, 0.4), (40, 0.6))[:max(reps, 1)]):
+        flow = random_flow(n, pc, rng=n + rep)
+        rng = random.Random(rep)
+        pop = [ro2(flow)[0]] + [
+            random_plan(flow, rng) for _ in range(population - 1)
+        ]
+        arr = np.asarray(pop, dtype=np.int32)
+
+        def run(kernel):
+            import jax.numpy as jnp
+            from jax.experimental import enable_x64
+
+            with enable_x64():
+                refined, costs, steps = batched.block_move_pass_batch(
+                    jnp.asarray(flow.cost, dtype=jnp.float64),
+                    jnp.asarray(flow.sel, dtype=jnp.float64),
+                    jnp.asarray(batched.pred_matrix(flow)),
+                    jnp.asarray(arr),
+                    kernel=kernel,
+                    return_steps=True,
+                )
+                return (
+                    float(np.min(np.asarray(costs))),
+                    int(np.max(np.asarray(steps))),
+                )
+
+        (kscm, ksteps), kwall = _timed(lambda: run(True))
+        (vscm, vsteps), vwall = _timed(lambda: run(False))
+        assert kscm <= vscm + 1e-9  # identical fixpoint, never worse
+        scm_ro3 = ro3(flow)[1]
+        rows.append(_row(
+            "kernel_block_move", rep, f"n={n}_pc={int(pc * 100)}_B={population}",
+            f"steps={ksteps}|wall={kwall * 1e3:.0f}ms",
+            f"steps={vsteps}|wall={vwall * 1e3:.0f}ms",
+            f"scalar_ro3_scm={scm_ro3:.2f}",
+            f"scm={kscm:.2f}|pass_saving={1 - ksteps / vsteps:.3f}",
+        ))
+
+
+def run(reps: int = 5, n_rows: int = 65_536, block: int = 1024) -> list[dict]:
+    rows: list[dict] = []
+    _filter_chain_case(rows, reps, n_rows, block)
+    _flash_tiles_case(rows)
+    _block_move_case(rows, min(reps, 3))
     return rows

@@ -41,7 +41,7 @@ ops = case_study_ops()
 stats = FlowStats(ops, extra_edges=case_study_extra_edges())
 ex = HostExecutor(ops, stats=stats)
 tweets = make_tweets(300_000, seed=7)
-for name in ("swap", "ro3", "batched-ro3", "topsort"):
+for name in ("swap", "ro3", "batched-ro3", "kernel-ro3", "topsort"):
     order = plans.get(name)
     if order is None:  # registry gate skipped it above
         continue

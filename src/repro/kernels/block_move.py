@@ -1,0 +1,227 @@
+"""Fused RO-III block-move sweep as a Pallas kernel (paper Algorithm 2).
+
+The device-batched substrate (``optim.batched.block_move_pass_batch``) runs
+the block-transposition local search as a vmapped state machine that probes
+*one* (block size, start) pair per ``while_loop`` step — gather/cumsum-bound,
+with a device pass per probe (~``k * n`` passes per sweep).  This kernel
+collapses the probe loop: each grid program owns one plan row, keeps the §2
+prefix arrays S/WP (``optim.batched.prefix_arrays_batch``) in
+registers/VMEM, and scores **every** (start s, size b in 1..k, target t)
+candidate delta in one fused step — a ``(k, n+1, n+1)`` tensor of the O(1)
+deltas ``P (W_M (1 - s_B) + W_B (s_M - 1))`` plus a precedence-feasibility
+rectangle test — then applies the move the scalar policy would apply next.
+
+Policy equivalence: ``core.rank.block_move_pass`` scans (size 1..k, start
+left-to-right), applies the best strictly-improving target at the first
+improving (size, start), stays there, and restarts the sweep on improvement.
+Between two accepted moves the order does not change, so "the next accepted
+move" is exactly the scan-order-first improving (size, start) at or after
+the current scan pointer *evaluated on the current order* — which is what
+one kernel step computes.  The kernel therefore replicates the scalar (and
+vmapped) policy move for move, in one device step per accepted move (plus
+one per sweep fixpoint check) instead of one per probe.
+
+TPU notes: every per-step op is a matmul, an elementwise broadcast or a
+cumulative reduce — no dynamic gathers.  Task-metadata lookups ``cost[o]``
+and the permuted precedence matrix ``pred[o_i, o_j]`` go through the
+one-hot permutation matrix of the current order (two (n, n) matmuls), and
+the block-move permutation update is a one-hot select on an index map.
+``interpret=True`` (the default off-TPU) runs the same program under the
+Pallas interpreter, including in float64 under ``jax.experimental.
+enable_x64`` — the mode the oracle tests pin.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+_IMPROVE_EPS = -1e-12  # same strict-improvement threshold as core.rank
+
+
+def _effective_k(k: int, n: int) -> int:
+    """Block sizes > n - 1 have no feasible target; don't unroll them."""
+    return max(1, min(k, n - 1))
+
+
+def _shift_rows(a: jax.Array, b: int, fill) -> jax.Array:
+    """``a`` shifted up by ``b`` rows, vacated rows filled (b static)."""
+    if b >= a.shape[0]:
+        return jnp.full_like(a, fill)
+    pad = jnp.full((b,) + a.shape[1:], fill, a.dtype)
+    return jnp.concatenate([a[b:], pad], axis=0)
+
+
+def _kernel(
+    cost_ref, sel_ref, pred_ref, order_ref, out_ref, steps_ref,
+    *, k: int, max_rounds: int, n: int,
+):
+    dtype = cost_ref.dtype
+    cv = cost_ref[...]  # (1, n)
+    sv = sel_ref[...]  # (1, n)
+    pv = pred_ref[...]  # (n, n)  0/1 in dtype: [i, j] iff i must precede j
+    inf = jnp.asarray(jnp.inf, dtype)
+    eps = jnp.asarray(_IMPROVE_EPS, dtype)
+    BIG = jnp.int32(k * n + 1)  # > any scan index (b-1)*n + s
+
+    taskcol = lax.broadcasted_iota(jnp.int32, (n, n), 1)
+    idxrow = lax.broadcasted_iota(jnp.int32, (1, n), 1)
+    s_aug = lax.broadcasted_iota(jnp.int32, (n + 1, n + 1), 0)
+    t_aug = lax.broadcasted_iota(jnp.int32, (n + 1, n + 1), 1)
+    jpos = lax.broadcasted_iota(jnp.int32, (n + 1, n), 1)
+    spos = lax.broadcasted_iota(jnp.int32, (n + 1, n), 0)
+    b_grid = lax.broadcasted_iota(jnp.int32, (k, n + 1), 0)
+    s_grid = lax.broadcasted_iota(jnp.int32, (k, n + 1), 1)
+    lin_grid = b_grid * n + s_grid  # scan index: size-major, start-minor
+
+    def body(st):
+        o, ptr = st["order"], st["ptr"]
+        # one-hot permutation of the current order: oh[i, v] = [o_i == v]
+        oh = (jnp.reshape(o, (n, 1)) == taskcol).astype(dtype)
+        c_ord = jnp.sum(oh * cv, axis=1, keepdims=True)  # (n, 1) cost[o]
+        s_ord = jnp.sum(oh * sv, axis=1, keepdims=True)  # (n, 1) sel[o]
+        # §2 prefix arrays (prefix_arrays_batch, one row): S/WP as columns
+        one = jnp.ones((1, 1), dtype)
+        S = jnp.concatenate([one, jnp.cumprod(s_ord, axis=0)], axis=0)
+        WP = jnp.concatenate(
+            [one * 0.0, jnp.cumsum(c_ord * S[:-1], axis=0)], axis=0
+        )
+        St, Wt = jnp.reshape(S, (1, n + 1)), jnp.reshape(WP, (1, n + 1))
+        # position-space conflicts: conflict[i, j] = pred[o_i, o_j]
+        conflict = jnp.dot(
+            oh, jnp.dot(pv, oh.T, preferred_element_type=dtype),
+            preferred_element_type=dtype,
+        )
+        CC = jnp.concatenate(  # column-wise exclusive prefix counts
+            [jnp.zeros((1, n), dtype), jnp.cumsum(conflict, axis=0)],
+            axis=0,
+        )  # (n+1, n)
+
+        bestd_sizes, bestt_sizes = [], []
+        for b in range(1, k + 1):  # static unroll over block sizes
+            Se = _shift_rows(S, b, 1.0)  # S[s+b] per start row s
+            We = _shift_rows(WP, b, 0.0)
+            # O(1) delta of moving [s, s+b) after t, all (s, t) at once
+            sB = Se / S
+            wB = (We - WP) / S
+            sM = St / Se
+            wM = (Wt - We) / Se
+            delta = S * (wM * (1.0 - sB) + wB * (sM - 1.0))  # (n+1, n+1)
+            # feasibility: no block member may precede a jumped-over task
+            blockprec = (_shift_rows(CC, b, 0.0) - CC) > 0.5  # (n+1, n)
+            bad = (blockprec & (jpos >= spos + b)).astype(jnp.int32)
+            badcum = jnp.concatenate(
+                [jnp.zeros((n + 1, 1), jnp.int32), jnp.cumsum(bad, axis=1)],
+                axis=1,
+            )  # (n+1, n+1): bad positions in [0, t)
+            bc_e = jnp.sum(
+                jnp.where(t_aug == s_aug + b, badcum, 0),
+                axis=1, keepdims=True, dtype=jnp.int32,
+            )  # badcum at t = s + b, gather-free
+            feasible = (
+                (t_aug > s_aug + b) & (badcum == bc_e) & (s_aug + b <= n)
+            )
+            masked = jnp.where(feasible, delta, inf)
+            bestd_sizes.append(jnp.min(masked, axis=1, keepdims=True).T)
+            bestt_sizes.append(
+                jnp.argmin(masked, axis=1, keepdims=True).astype(jnp.int32).T
+            )
+        bestd = jnp.concatenate(bestd_sizes, axis=0)  # (k, n+1)
+        bestt = jnp.concatenate(bestt_sizes, axis=0)
+        improving = bestd < eps
+        cand = jnp.where(improving & (lin_grid >= ptr), lin_grid, BIG)
+        first = jnp.min(cand)  # scan-order-first improving (size, start)
+        accept = first < BIG
+
+        # decode the accepted move (garbage when ~accept; gated below)
+        t_star = jnp.sum(jnp.where(cand == first, bestt, 0), dtype=jnp.int32)
+        b_star = first // n + 1
+        s_star = first % n
+        msize = t_star - (s_star + b_star)
+        src = jnp.where(
+            idxrow < s_star,
+            idxrow,
+            jnp.where(
+                idxrow < s_star + msize,
+                idxrow + b_star,
+                jnp.where(idxrow < t_star, idxrow - msize, idxrow),
+            ),
+        )  # A|B|M|R -> A|M|B|R as an index map
+        perm = (taskcol == jnp.reshape(src, (n, 1))).astype(jnp.int32)
+        new_o = jnp.reshape(jnp.sum(perm * o, axis=1, dtype=jnp.int32), (1, n))
+
+        # sweep bookkeeping: accepted moves keep the pointer (re-probe the
+        # same slot on the new order); a fixpoint step ends the sweep
+        rounds = jnp.where(accept, st["rounds"], st["rounds"] + 1)
+        done = ~accept & (~st["improved"] | (rounds >= max_rounds))
+        return {
+            "order": jnp.where(accept, new_o, o),
+            "ptr": jnp.where(accept, first, jnp.int32(0)),
+            "improved": accept,  # any accept this sweep => one more sweep
+            "rounds": rounds,
+            "done": done,
+            "steps": st["steps"] + 1,
+        }
+
+    init = {
+        "order": order_ref[...],
+        "ptr": jnp.int32(0),
+        "improved": jnp.asarray(False),
+        "rounds": jnp.int32(0),
+        "done": jnp.asarray(False),
+        "steps": jnp.int32(0),
+    }
+    out = lax.while_loop(lambda st: ~st["done"], body, init)
+    out_ref[...] = out["order"]
+    steps_ref[...] = jnp.reshape(out["steps"], (1, 1))
+
+
+@functools.partial(jax.jit, static_argnames=("k", "max_rounds", "interpret"))
+def block_move_sweep_kernel(
+    cost: jax.Array,  # (n,) task costs
+    sel: jax.Array,  # (n,) task selectivities
+    pred: jax.Array,  # (n, n) bool, [j, v]: j must precede v (closure)
+    orders: jax.Array,  # (B, n) int32 population of valid plans
+    k: int = 5,
+    max_rounds: int = 50,
+    interpret: bool = True,
+) -> tuple[jax.Array, jax.Array]:
+    """Refine every row of ``orders`` to the RO-III block-move fixpoint.
+
+    Returns ``(refined (B, n) int32, steps (B,) int32)`` where ``steps``
+    counts while-loop iterations per row (accepted moves + sweep fixpoint
+    checks) — the per-row device-pass metric ``bench_kernels`` compares
+    against the probe count of the vmapped state machine.
+    """
+    B, n = orders.shape
+    keff = _effective_k(k, n)
+    dtype = cost.dtype
+    kernel = functools.partial(_kernel, k=keff, max_rounds=max_rounds, n=n)
+    refined, steps = pl.pallas_call(
+        kernel,
+        grid=(B,),
+        in_specs=[
+            pl.BlockSpec((1, n), lambda i: (0, 0)),
+            pl.BlockSpec((1, n), lambda i: (0, 0)),
+            pl.BlockSpec((n, n), lambda i: (0, 0)),
+            pl.BlockSpec((1, n), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, n), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, n), jnp.int32),
+            jax.ShapeDtypeStruct((B, 1), jnp.int32),
+        ],
+        interpret=interpret,
+    )(
+        jnp.reshape(cost, (1, n)),
+        jnp.reshape(sel, (1, n)),
+        pred.astype(dtype),
+        orders.astype(jnp.int32),
+    )
+    return refined, steps[:, 0]

@@ -14,14 +14,42 @@ import jax
 import jax.numpy as jnp
 
 from . import ref
+from .block_move import block_move_sweep_kernel
 from .filter_chain import filter_chain
 from .flash_attention import flash_attention
 
-__all__ = ["filter_chain", "flash_attention", "attention", "on_tpu"]
+__all__ = [
+    "filter_chain",
+    "flash_attention",
+    "attention",
+    "block_move_sweep",
+    "on_tpu",
+]
 
 
 def on_tpu() -> bool:
     return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("k", "max_rounds"))
+def block_move_sweep(
+    cost: jax.Array,
+    sel: jax.Array,
+    pred: jax.Array,
+    orders: jax.Array,
+    k: int = 5,
+    max_rounds: int = 50,
+) -> tuple[jax.Array, jax.Array]:
+    """RO-III block-move refinement of a plan population (B, n) via the
+    fused Pallas sweep kernel: Mosaic-compiled on a TPU backend, Pallas
+    interpreter elsewhere (same program, so CPU CI validates the TPU path).
+
+    Returns ``(refined orders (B, n) int32, per-row device steps (B,))``.
+    """
+    return block_move_sweep_kernel(
+        cost, sel, pred, orders, k=k, max_rounds=max_rounds,
+        interpret=not on_tpu(),
+    )
 
 
 @functools.partial(

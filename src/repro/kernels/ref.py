@@ -1,6 +1,8 @@
 """Pure-jnp oracles for every Pallas kernel in this package."""
 from __future__ import annotations
 
+import functools
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -54,6 +56,142 @@ def attention_ref(
     probs = jnp.where(jnp.isnan(probs), 0.0, probs)  # fully-masked rows
     out = jnp.einsum("bhgst,bhtd->bhgsd", probs, vf)
     return out.reshape(B, Hq, S, D).astype(q.dtype)
+
+
+_IMPROVE_EPS = -1e-12  # strict-improvement threshold shared with core.rank
+
+
+def _block_move_ref_row(cost, sel, pred, order, *, k: int, max_rounds: int):
+    """One plan's RO-III block-move fixpoint, one accepted move per step.
+
+    Same policy as ``core.rank.block_move_pass`` (scan sizes 1..k, starts
+    left-to-right, best strictly-improving target, stay on improvement,
+    sweep to fixpoint): between accepted moves the order is unchanged, so
+    each step scores all (size, start, target) candidates on the current
+    order and applies the scan-order-first improving one at or after the
+    scan pointer.  Plain-jnp (gathers allowed) — the oracle the gather-free
+    Pallas kernel is pinned against.
+    """
+    n = order.shape[0]
+    idx = jnp.arange(n)
+    idx1 = jnp.arange(n + 1)
+    BIG = jnp.int32(k * n + 1)
+    eps = jnp.asarray(_IMPROVE_EPS, cost.dtype)
+    inf = jnp.asarray(jnp.inf, cost.dtype)
+    b_grid = jnp.broadcast_to(jnp.arange(k)[:, None], (k, n + 1))
+    s_grid = jnp.broadcast_to(idx1[None, :], (k, n + 1))
+    lin_grid = (b_grid * n + s_grid).astype(jnp.int32)
+
+    def body(st):
+        o, ptr = st["order"], st["ptr"]
+        c = cost[o]
+        sl = sel[o]
+        S = jnp.concatenate([jnp.ones_like(sl[:1]), jnp.cumprod(sl)])
+        WP = jnp.concatenate([jnp.zeros_like(c[:1]), jnp.cumsum(c * S[:-1])])
+        conflict = pred[o[:, None], o[None, :]]  # [i, j]: o_i precedes o_j
+        CC = jnp.concatenate(
+            [jnp.zeros((1, n), jnp.int32),
+             jnp.cumsum(conflict.astype(jnp.int32), axis=0)],
+            axis=0,
+        )  # (n+1, n) column prefix counts of conflicts
+        bestd_sizes, bestt_sizes = [], []
+        for b in range(1, k + 1):
+            e = jnp.minimum(idx1 + b, n)  # block end per start (clipped)
+            Ss, Se = S[:, None], S[e][:, None]
+            Ws, We = WP[:, None], WP[e][:, None]
+            St, Wt = S[None, :], WP[None, :]
+            sB = Se / Ss
+            wB = (We - Ws) / Ss
+            sM = St / Se
+            wM = (Wt - We) / Se
+            delta = Ss * (wM * (1.0 - sB) + wB * (sM - 1.0))  # (n+1, n+1)
+            blockprec = (CC[e] - CC) > 0  # (n+1, n)
+            bad = blockprec & (idx[None, :] >= idx1[:, None] + b)
+            badcum = jnp.concatenate(
+                [jnp.zeros((n + 1, 1), jnp.int32),
+                 jnp.cumsum(bad.astype(jnp.int32), axis=1)],
+                axis=1,
+            )
+            bc_e = jnp.take_along_axis(badcum, e[:, None], axis=1)
+            feasible = (
+                (idx1[None, :] > idx1[:, None] + b)
+                & (badcum == bc_e)
+                & (idx1[:, None] + b <= n)
+            )
+            masked = jnp.where(feasible, delta, inf)
+            bestd_sizes.append(jnp.min(masked, axis=1))
+            bestt_sizes.append(jnp.argmin(masked, axis=1).astype(jnp.int32))
+        bestd = jnp.stack(bestd_sizes)  # (k, n+1)
+        bestt = jnp.stack(bestt_sizes)
+        improving = bestd < eps
+        cand = jnp.where(improving & (lin_grid >= ptr), lin_grid, BIG)
+        first = jnp.min(cand)
+        accept = first < BIG
+
+        t_star = jnp.sum(jnp.where(cand == first, bestt, 0), dtype=jnp.int32)
+        b_star = first // n + 1
+        s_star = first % n
+        msize = t_star - (s_star + b_star)
+        src = jnp.where(
+            idx < s_star,
+            idx,
+            jnp.where(
+                idx < s_star + msize,
+                idx + b_star,
+                jnp.where(idx < t_star, idx - msize, idx),
+            ),
+        )
+        new_o = o[jnp.clip(src, 0, n - 1)]
+
+        rounds = jnp.where(accept, st["rounds"], st["rounds"] + 1)
+        done = ~accept & (~st["improved"] | (rounds >= max_rounds))
+        return {
+            "order": jnp.where(accept, new_o, o),
+            "ptr": jnp.where(accept, first, jnp.int32(0)),
+            "improved": accept,
+            "rounds": rounds,
+            "done": done,
+            "steps": st["steps"] + 1,
+        }
+
+    def guarded(st):
+        new = body(st)  # vmapped while_loop runs finished rows too: freeze
+        return jax.tree.map(lambda a, b: jnp.where(st["done"], a, b), st, new)
+
+    init = {
+        "order": order.astype(jnp.int32),
+        "ptr": jnp.int32(0),
+        "improved": jnp.asarray(False),
+        "rounds": jnp.int32(0),
+        "done": jnp.asarray(False),
+        "steps": jnp.int32(0),
+    }
+    out = jax.lax.while_loop(lambda st: ~st["done"], guarded, init)
+    return out["order"], out["steps"]
+
+
+@functools.partial(jax.jit, static_argnames=("k", "max_rounds"))
+def block_move_pass_ref(
+    cost: jax.Array,  # (n,) task costs
+    sel: jax.Array,  # (n,) task selectivities
+    pred: jax.Array,  # (n, n) bool, [j, v]: j must precede v (closure)
+    orders: jax.Array,  # (B, n) int32 population of valid plans
+    k: int = 5,
+    max_rounds: int = 50,
+) -> tuple[jax.Array, jax.Array]:
+    """Reference RO-III block-move refinement of a plan population.
+
+    Returns ``(refined (B, n) int32, steps (B,) int32)``; ``steps`` counts
+    accepted moves + sweep fixpoint checks per row, matching the kernel's
+    device-pass metric.
+    """
+    n = orders.shape[1]
+    keff = max(1, min(k, n - 1))  # sizes > n-1 have no feasible target
+    row = functools.partial(
+        _block_move_ref_row, cost, sel, pred.astype(bool),
+        k=keff, max_rounds=max_rounds,
+    )
+    return jax.vmap(row)(orders.astype(jnp.int32))
 
 
 def ssd_ref(

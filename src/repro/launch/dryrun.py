@@ -53,6 +53,10 @@ def optimizer_dryrun() -> int:
         print(f"# {fname}: n={f.n}, pc_density={f.pc_fraction():.0%}", flush=True)
         _, scm_pg2 = pgreedy2(f)  # scalar §6 baseline for the batched entries
         print(f"[ref]  pgreedy2-scalar scm={scm_pg2:10.3f}", flush=True)
+        # scalar RO-III baseline the kernel-backed population search must
+        # never lose to (its row 0 replays ro3's move policy exactly)
+        _, scm_ro3 = get_optimizer("ro3").raw(f)
+        print(f"[ref]  ro3-scalar      scm={scm_ro3:10.3f}", flush=True)
         for name in list_optimizers():
             opt = get_optimizer(name)
             if not opt.supports(f):
@@ -78,6 +82,14 @@ def optimizer_dryrun() -> int:
                 print(
                     f"[FAIL] {name}: scm {r.scm:.3f} worse than scalar "
                     f"pgreedy2 {scm_pg2:.3f}",
+                    file=sys.stderr,
+                )
+                continue
+            if name == "kernel-ro3" and r.scm > scm_ro3 + 1e-9:
+                failures += 1
+                print(
+                    f"[FAIL] {name}: scm {r.scm:.3f} worse than scalar "
+                    f"ro3 {scm_ro3:.3f}",
                     file=sys.stderr,
                 )
                 continue

@@ -120,6 +120,14 @@ register(
     "call; row 0 seeds from RO-II so it is never worse than scalar ro3.",
 )
 register(
+    "kernel-ro3",
+    batched.kernel_population_hill_climb,
+    tags={APPROXIMATE, HANDLES_CONSTRAINTS, BATCHABLE},
+    doc="Population RO-III on the fused Pallas block-move sweep kernel: one "
+    "device step per accepted move (all start/size/target candidates scored "
+    "in-kernel); row 0 seeds from RO-II so it is never worse than scalar ro3.",
+)
+register(
     "portfolio",
     batched.portfolio_search,
     tags={APPROXIMATE, HANDLES_CONSTRAINTS, BATCHABLE, STOCHASTIC},

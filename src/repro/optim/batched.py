@@ -16,6 +16,10 @@ evaluates *populations* of plans at once:
   (sizes 1..k, left-to-right, best target per block, stay on improvement,
   sweep to fixpoint) replicates ``core.rank.block_move_pass`` move for move;
   in float64 the refined plans match the scalar RO-III post-pass exactly.
+  With ``kernel=True`` the same refinement runs as the fused Pallas sweep
+  (``kernels.block_move``): one device step per *accepted move* instead of
+  one per (size, start) probe — every (start, size 1..k, target) candidate
+  is scored inside the kernel per step.  Same policy, same fixpoints.
 * ``portfolio_search`` — portfolio + mutate-and-select over generations,
   seeded from any registered (non-batched) optimizer.
 
@@ -45,6 +49,7 @@ __all__ = [
     "pred_matrix",
     "hill_climb",
     "population_hill_climb",
+    "kernel_population_hill_climb",
     "portfolio_search",
 ]
 
@@ -200,6 +205,7 @@ def _block_move_pass_row(
             "improved": improved & ~sweep_done,
             "rounds": rounds,
             "done": done,
+            "steps": st["steps"] + 1,
         }
 
     def guarded_body(st):
@@ -216,12 +222,15 @@ def _block_move_pass_row(
         "improved": jnp.asarray(False),
         "rounds": i32(0),
         "done": jnp.asarray(False),
+        "steps": i32(0),
     }
     out = jax.lax.while_loop(lambda st: ~st["done"], guarded_body, init)
-    return out["order"]
+    return out["order"], out["steps"]
 
 
-@functools.partial(jax.jit, static_argnames=("k", "max_rounds"))
+@functools.partial(
+    jax.jit, static_argnames=("k", "max_rounds", "kernel", "return_steps")
+)
 def block_move_pass_batch(
     cost: jax.Array,
     sel: jax.Array,
@@ -229,14 +238,34 @@ def block_move_pass_batch(
     orders: jax.Array,
     k: int = 5,
     max_rounds: int = 50,
-) -> tuple[jax.Array, jax.Array]:
+    kernel: bool = False,
+    return_steps: bool = False,
+):
     """Refine every row of ``orders`` (B, n) with the RO-III block-move local
-    search; returns (refined orders, their SCMs)."""
-    row = functools.partial(
-        _block_move_pass_row, cost, sel, pred, k=k, max_rounds=max_rounds
-    )
-    refined = jax.vmap(row)(orders)
-    return refined, scm_batch(cost, sel, refined)
+    search; returns (refined orders, their SCMs).
+
+    ``kernel=True`` dispatches to the fused Pallas sweep
+    (``kernels.ops.block_move_sweep``) instead of the vmapped state machine —
+    identical move policy and fixpoints, far fewer sequential device steps.
+    ``return_steps=True`` appends the per-row while-loop iteration count
+    (probes for the vmapped machine, accepted moves + sweep checks for the
+    kernel) — the device-pass metric ``bench_kernels`` compares.
+    """
+    if kernel:
+        from ..kernels.ops import block_move_sweep
+
+        refined, steps = block_move_sweep(
+            cost, sel, pred, orders, k=k, max_rounds=max_rounds
+        )
+    else:
+        row = functools.partial(
+            _block_move_pass_row, cost, sel, pred, k=k, max_rounds=max_rounds
+        )
+        refined, steps = jax.vmap(row)(orders)
+    costs = scm_batch(cost, sel, refined)
+    if return_steps:
+        return refined, costs, steps
+    return refined, costs
 
 
 # ------------------------------------------------------------- host wrappers
@@ -255,12 +284,14 @@ def hill_climb(
     orders,
     k: int = 5,
     max_rounds: int = 50,
+    kernel: bool = False,
 ) -> tuple[np.ndarray, np.ndarray]:
     """Device-refine a population of valid orders for ``flow``.
 
     Runs in float64 (via the x64 context) so the refinement is bit-compatible
     with the scalar ``core.rank.block_move_pass``.  Returns (orders (B, n)
-    int32, SCMs (B,) float64).
+    int32, SCMs (B,) float64).  ``kernel=True`` runs the fused Pallas sweep
+    backend (same policy and fixpoints, see ``block_move_pass_batch``).
     """
     arr = np.asarray(orders, dtype=np.int32)
     if arr.ndim != 2 or arr.shape[1] != flow.n:
@@ -273,6 +304,7 @@ def hill_climb(
             jnp.asarray(arr),
             k=k,
             max_rounds=max_rounds,
+            kernel=kernel,
         )
         out = np.asarray(refined)
         c = np.asarray(costs)
@@ -285,13 +317,15 @@ def population_hill_climb(
     population: int = 256,
     seed: int = 0,
     max_rounds: int = 50,
+    kernel: bool = False,
 ) -> tuple[list[int], float]:
     """Batched RO-III: refine a whole population of plans in one device call.
 
     Row 0 is the RO-II plan — so the result is never worse than scalar RO-III
     (the refinement replicates its move policy) — and the remaining rows are
     random valid plans that climb in parallel, often escaping RO-III's local
-    optimum at no extra wall-clock on an accelerator.
+    optimum at no extra wall-clock on an accelerator.  ``kernel=True`` routes
+    the refinement through the fused Pallas sweep.
     """
     from ..core.heuristics import random_plan
     from ..core.rank import ro2
@@ -300,11 +334,35 @@ def population_hill_climb(
     rows: list[list[int]] = [ro2(flow)[0]]
     while len(rows) < population:
         rows.append(random_plan(flow, rng))
-    refined, costs = hill_climb(flow, np.asarray(rows), k=k, max_rounds=max_rounds)
+    refined, costs = hill_climb(
+        flow, np.asarray(rows), k=k, max_rounds=max_rounds, kernel=kernel
+    )
     best = int(np.argmin(costs))
     order = [int(v) for v in refined[best]]
     assert flow.is_valid_order(order)
     return order, scm(flow, order)
+
+
+def kernel_population_hill_climb(
+    flow: Flow,
+    k: int = 5,
+    population: int = 64,
+    seed: int = 0,
+    max_rounds: int = 50,
+) -> tuple[list[int], float]:
+    """``population_hill_climb`` on the fused Pallas sweep backend.
+
+    Registered as ``kernel-ro3``: row 0 seeds from RO-II and the kernel
+    replicates scalar RO-III's move policy exactly, so the result is never
+    worse than ``ro3``.  The default population is smaller than
+    ``batched-ro3``'s — each kernel grid program retires one accepted move
+    per step rather than one probe, so a 64-plan population already spans
+    more basins per device pass than the vmapped machine's 256.
+    """
+    return population_hill_climb(
+        flow, k=k, population=population, seed=seed, max_rounds=max_rounds,
+        kernel=True,
+    )
 
 
 # ---------------------------------------------------------- portfolio search

@@ -4,7 +4,9 @@ Wraps an executor with the paper's optimizer: every ``reoptimize_every``
 batches the live ``FlowStats`` are turned into a ``core.Flow`` and the chosen
 algorithm proposes a plan.  Any optimizer registered in ``repro.optim`` can
 be selected by name — "ro3" (default), "portfolio"/"batched-ro3" for the
-device-batched searches, "dp"/"topsort" for exact plans on small flows, etc.
+device-batched searches, "kernel-ro3" for the fused Pallas block-move sweep
+(one device pass per accepted move), "dp"/"topsort" for exact plans on
+small flows, etc.
 We switch only when the predicted SCM improvement exceeds
 ``switch_threshold`` — plan churn has a (small) recompile cost in the fused
 path, so tiny predicted gains are ignored.

@@ -1,0 +1,185 @@
+"""Pallas block-move sweep kernel vs oracle, vmapped machine and scalar ro3.
+
+Three independent implementations of the RO-III block-transposition policy
+are pinned against each other in float64 interpret mode:
+
+* ``kernels.block_move`` — the fused Pallas kernel (gather-free: one-hot
+  matmuls, shift-and-fill prefixes, one accepted move per device step);
+* ``kernels.ref.block_move_pass_ref`` — plain-jnp oracle (direct gathers);
+* ``optim.batched._block_move_pass_row`` — the vmapped probe-at-a-time
+  state machine (one (size, start) probe per step);
+* ``core.rank.ro3`` — the paper's scalar Algorithm 2 on the RO-II seed.
+
+Seeded checks below always run; the hypothesis section widens the flow
+space when the package is available (CI has it; the module must not skip
+wholesale without it, the seeded regression is tier-1).
+"""
+import random
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+from jax.experimental import enable_x64
+
+from repro.core import random_flow, random_plan, ro2, ro3, scm
+from repro.kernels.block_move import block_move_sweep_kernel
+from repro.kernels.ops import block_move_sweep
+from repro.kernels.ref import block_move_pass_ref
+from repro.optim import batched
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - CI installs hypothesis
+    HAVE_HYPOTHESIS = False
+
+
+def _device_args(flow, rows):
+    with enable_x64():  # create f64 on device; dtypes persist past the ctx
+        return (
+            jnp.asarray(flow.cost, dtype=jnp.float64),
+            jnp.asarray(flow.sel, dtype=jnp.float64),
+            jnp.asarray(batched.pred_matrix(flow)),
+            jnp.asarray(np.asarray(rows, dtype=np.int32)),
+        )
+
+
+def _population(flow, b, seed):
+    rng = random.Random(seed)
+    return [ro2(flow)[0]] + [random_plan(flow, rng) for _ in range(b - 1)]
+
+
+def _check_parity(flow, rows, k=5):
+    """Kernel == oracle (orders AND step counts) == vmapped machine, every
+    refined row feasible, row 0 == scalar ro3 move-for-move."""
+    c, s, p, o = _device_args(flow, rows)
+    with enable_x64():
+        kr, ksteps = block_move_sweep_kernel(c, s, p, o, k=k)
+        rr, rsteps = block_move_pass_ref(c, s, p, o, k=k)
+        vr, _ = batched.block_move_pass_batch(c, s, p, o, k=k)
+        feasible = batched.valid_batch(p, kr)
+    kr, ksteps = np.asarray(kr), np.asarray(ksteps)
+    np.testing.assert_array_equal(kr, np.asarray(rr))
+    np.testing.assert_array_equal(ksteps, np.asarray(rsteps))
+    np.testing.assert_array_equal(kr, np.asarray(vr))
+    assert np.asarray(feasible).all()
+    for start, refined in zip(rows, kr):
+        refined = [int(v) for v in refined]
+        assert flow.is_valid_order(refined)
+        assert scm(flow, refined) <= scm(flow, list(start)) + 1e-9
+    o3, c3 = ro3(flow, k=k)
+    assert [int(v) for v in kr[0]] == o3
+    assert scm(flow, o3) == pytest.approx(c3, rel=1e-12)
+
+
+# ------------------------------------------------------- seeded parity sweep
+@pytest.mark.parametrize(
+    "n,pc,seed",
+    [(2, 0.0, 0), (5, 0.2, 1), (9, 0.4, 2), (13, 0.0, 3), (17, 0.3, 4),
+     (20, 0.6, 5), (24, 0.5, 6)],
+)
+def test_kernel_matches_ref_and_vmapped_seeded(n, pc, seed):
+    flow = random_flow(n, pc, rng=seed)
+    _check_parity(flow, _population(flow, 8, seed))
+
+
+def test_kernel_matches_across_block_size_caps():
+    flow = random_flow(14, 0.4, rng=7)
+    rows = _population(flow, 6, 7)
+    for k in (1, 2, 3, 7):
+        _check_parity(flow, rows, k=k)
+
+
+def test_every_round_snapshot_stays_feasible():
+    """Truncating the sweep at any round budget must still yield valid plans
+    — i.e. every accepted move preserved feasibility along the way."""
+    flow = random_flow(18, 0.5, rng=11)
+    c, s, p, o = _device_args(flow, _population(flow, 6, 11))
+    with enable_x64():
+        for max_rounds in (1, 2, 3):
+            kr, _ = block_move_sweep_kernel(c, s, p, o, max_rounds=max_rounds)
+            assert np.asarray(batched.valid_batch(p, kr)).all()
+
+
+def test_ops_wrapper_dispatches_interpret_off_tpu():
+    flow = random_flow(10, 0.3, rng=3)
+    c, s, p, o = _device_args(flow, _population(flow, 4, 3))
+    with enable_x64():
+        kr, steps = block_move_sweep(c, s, p, o)
+        want, _ = block_move_sweep_kernel(c, s, p, o, interpret=True)
+    np.testing.assert_array_equal(np.asarray(kr), np.asarray(want))
+    assert np.asarray(steps).shape == (4,)
+
+
+def test_kernel_needs_no_more_device_steps_than_vmapped():
+    """Acceptance: the multi-block-size kernel reaches the same fixpoint in
+    <= the device passes of the single-block-per-step vmapped machine."""
+    for n, seed in ((12, 0), (20, 1), (30, 2)):
+        flow = random_flow(n, 0.4, rng=seed)
+        c, s, p, o = _device_args(flow, _population(flow, 8, seed))
+        with enable_x64():
+            kr, kc, ksteps = batched.block_move_pass_batch(
+                c, s, p, o, kernel=True, return_steps=True
+            )
+            vr, vc, vsteps = batched.block_move_pass_batch(
+                c, s, p, o, return_steps=True
+            )
+        np.testing.assert_array_equal(np.asarray(kr), np.asarray(vr))
+        np.testing.assert_allclose(np.asarray(kc), np.asarray(vc), rtol=1e-12)
+        assert (np.asarray(ksteps) <= np.asarray(vsteps)).all()
+        # lockstep cost of a batch is its slowest row
+        assert int(np.asarray(ksteps).max()) <= int(np.asarray(vsteps).max())
+
+
+# -------------------------------------------- seeded end-to-end regression
+def test_kernel_ro3_never_worse_than_scalar_ro3_20_flows():
+    """Acceptance: `kernel-ro3` reproduces scalar ro3's final order/SCM from
+    the RO-II seed (row 0) and its population result is never worse, on 20
+    seeded generator flows."""
+    checked = 0
+    for n in (8, 12, 16, 20):
+        for i in range(5):
+            flow = random_flow(n, 0.4, rng=100 * n + i)
+            rows = _population(flow, 16, i)
+            refined, costs = batched.hill_climb(
+                flow, np.asarray(rows), kernel=True
+            )
+            o3, c3 = ro3(flow)
+            assert [int(v) for v in refined[0]] == o3
+            assert costs[0] == pytest.approx(c3, rel=1e-9)
+            order, cost = batched.kernel_population_hill_climb(
+                flow, population=16, seed=i
+            )
+            assert flow.is_valid_order(order)
+            assert cost <= c3 + 1e-9
+            checked += 1
+    assert checked >= 20
+
+
+def test_kernel_ro3_registered_with_capabilities():
+    from repro import optim
+
+    opt = optim.get_optimizer("kernel-ro3")
+    assert {optim.APPROXIMATE, optim.BATCHABLE, optim.HANDLES_CONSTRAINTS} <= opt.tags
+    flow = random_flow(12, 0.3, rng=9)
+    res = opt(flow)
+    assert flow.is_valid_order(list(res.order))
+    assert res.scm <= ro3(flow)[1] + 1e-9
+
+
+# ------------------------------------------------- hypothesis property sweep
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        n=st.integers(min_value=2, max_value=24),
+        pc=st.floats(min_value=0.0, max_value=0.8),
+        seed=st.integers(min_value=0, max_value=2**31 - 1),
+    )
+    def test_kernel_parity_property(n, pc, seed):
+        """Random flows (mixed selectivities in (0, 2], random precedence
+        DAGs): kernel == oracle == vmapped machine, feasibility preserved."""
+        flow = random_flow(n, pc, rng=seed)
+        _check_parity(flow, _population(flow, 4, seed))

@@ -1,4 +1,11 @@
-"""Pallas kernels vs pure-jnp oracles (interpret mode), shape/dtype sweeps."""
+"""Pallas kernels vs pure-jnp oracles, shape/dtype sweeps.
+
+The oracle checks are parametrized over the ``interpret`` flag explicitly:
+interpret mode always runs (so kernel regressions surface on CPU CI), and on
+a TPU backend the same cases additionally run Mosaic-compiled — previously
+only the default backend was exercised, so a compiled-path regression could
+not surface before deployment.
+"""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -7,14 +14,19 @@ import pytest
 from repro.kernels import ref
 from repro.kernels.filter_chain import filter_chain
 from repro.kernels.flash_attention import flash_attention
+from repro.kernels.ops import on_tpu
 
 RNG = np.random.default_rng(0)
 
+# interpret=True validates everywhere; interpret=False needs real Mosaic
+INTERPRET_MODES = [True] + ([False] if on_tpu() else [])
 
+
+@pytest.mark.parametrize("interpret", INTERPRET_MODES)
 @pytest.mark.parametrize("n", [100, 1024, 3000])
 @pytest.mark.parametrize("dtype", [np.float32, np.int32])
 @pytest.mark.parametrize("k", [1, 3, 6])
-def test_filter_chain_matches_ref(n, dtype, k):
+def test_filter_chain_matches_ref(n, dtype, k, interpret):
     F = 8
     if dtype == np.float32:
         x = RNG.uniform(-1, 1, size=(n, F)).astype(dtype)
@@ -27,7 +39,7 @@ def test_filter_chain_matches_ref(n, dtype, k):
     feat = tuple(int(v) for v in RNG.integers(0, F, size=k))
     got = filter_chain(
         jnp.asarray(x), jnp.asarray(lo), jnp.asarray(hi), feat,
-        block_rows=256,
+        block_rows=256, interpret=interpret,
     )
     want = ref.filter_chain_ref(jnp.asarray(x), np.array(feat),
                                 jnp.asarray(lo), jnp.asarray(hi))
@@ -55,15 +67,17 @@ SWEEP = [
 ]
 
 
+@pytest.mark.parametrize("interpret", INTERPRET_MODES)
 @pytest.mark.parametrize("case", SWEEP, ids=[str(c) for c in SWEEP])
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
-def test_flash_attention_matches_ref(case, dtype):
+def test_flash_attention_matches_ref(case, dtype, interpret):
     B, Hq, Hkv, S, T, D, causal, window, off = case
     q = jnp.asarray(RNG.normal(size=(B, Hq, S, D)), dtype)
     k = jnp.asarray(RNG.normal(size=(B, Hkv, T, D)), dtype)
     v = jnp.asarray(RNG.normal(size=(B, Hkv, T, D)), dtype)
     got = flash_attention(
-        q, k, v, causal=causal, window=window, q_offset=off
+        q, k, v, causal=causal, window=window, q_offset=off,
+        interpret=interpret,
     ).astype(jnp.float32)
     want = ref.attention_ref(
         q.astype(jnp.float32), k.astype(jnp.float32),

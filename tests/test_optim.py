@@ -27,7 +27,7 @@ CORE_NAMES = (
     "backtracking", "dp", "topsort",
     "swap", "greedy1", "greedy2", "partition",
     "kbz", "ro1", "ro2", "ro3",
-    "batched-ro3", "portfolio",
+    "batched-ro3", "kernel-ro3", "portfolio",
     "batched-pgreedy", "parallel-portfolio",
 )
 
@@ -39,6 +39,7 @@ def test_registry_contents_and_tags():
         assert expected in names, expected
     assert set(optim.list_optimizers(tags=(optim.BATCHABLE,))) == {
         "batched-ro3",
+        "kernel-ro3",
         "portfolio",
         "batched-pgreedy",
         "parallel-portfolio",

@@ -175,6 +175,7 @@ def test_parallel_portfolio_stochastic_and_never_invalid():
 def test_parallel_registry_entries_and_tags():
     assert set(optim.list_optimizers(tags=(optim.BATCHABLE,))) == {
         "batched-ro3",
+        "kernel-ro3",
         "portfolio",
         "batched-pgreedy",
         "parallel-portfolio",
