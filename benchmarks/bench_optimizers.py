@@ -12,7 +12,17 @@ import numpy as np
 
 import time
 
-from repro.core import case_study_flow, random_flow, random_plan, scm
+from repro.core import (
+    butterfly,
+    butterfly_mimo_segments,
+    case_study_flow,
+    flow_to_mimo,
+    mimo_to_flow,
+    optimize_mimo,
+    random_flow,
+    random_plan,
+    scm,
+)
 from repro.core.parallel import pgreedy1, pgreedy2
 from repro.optim import STOCHASTIC, get_optimizer, list_optimizers
 
@@ -20,6 +30,8 @@ from repro.optim import STOCHASTIC, get_optimizer, list_optimizers
 # linear SCM of the returned order — normalized_scm is comparable only
 # within one cost model, so every row carries its model explicitly
 PARALLEL_ALGOS = {"batched-pgreedy", "parallel-portfolio"}
+# entries reporting the §5 MIMO total cost (union-merge volume model)
+MIMO_ALGOS = {"batched-mimo"}
 
 
 def _seed_kw(opt) -> str:
@@ -32,6 +44,18 @@ def _flows(quick: bool) -> list[tuple[str, object]]:
     sizes = ((15, 0.4),) if quick else ((15, 0.4), (40, 0.4), (80, 0.6))
     for n, pc in sizes:
         out.append((f"random_n{n}_pc{int(pc * 100)}", random_flow(n, pc, rng=n)))
+    # a flattened §5 butterfly MIMO flow: batched-mimo's supports() guard
+    # accepts it (segment annotations + joins); every other optimizer treats
+    # it as a plain flow under the linear cost model
+    n_seg, seg_size = (4, 5) if quick else (6, 8)
+    out.append(
+        (
+            f"butterfly_{n_seg}x{seg_size}",
+            mimo_to_flow(
+                butterfly(butterfly_mimo_segments(n_seg, seg_size, 0.4, rng=7))
+            ),
+        )
+    )
     return out
 
 
@@ -52,9 +76,26 @@ def run(reps: int = 3, quick: bool = False) -> list[dict]:
                     "algo": pname,
                     "scm": round(pcost, 4),
                     "normalized_scm": round(pcost / c0, 4),
-                    "wall_ms": round((time.perf_counter() - t0) * 1e3, 2),
                     "tags": "scalar-parallel-baseline",
                     "cost_model": "parallel",
+                    "wall_ms": round((time.perf_counter() - t0) * 1e3, 2),
+                }
+            )
+        if fname.startswith("butterfly"):
+            # scalar §5 baseline the batched MIMO search must never lose to
+            t0 = time.perf_counter()
+            mcost = optimize_mimo(flow_to_mimo(f), "ro3")
+            rows.append(
+                {
+                    "bench": "optimizers",
+                    "flow": fname,
+                    "n": f.n,
+                    "algo": "optimize-mimo-scalar",
+                    "scm": round(mcost, 4),
+                    "normalized_scm": round(mcost / c0, 4),
+                    "tags": "scalar-mimo-baseline",
+                    "cost_model": "mimo",
+                    "wall_ms": round((time.perf_counter() - t0) * 1e3, 2),
                 }
             )
         for name in list_optimizers():
@@ -80,7 +121,9 @@ def run(reps: int = 3, quick: bool = False) -> list[dict]:
                     ),
                     "tags": "|".join(sorted(opt.tags)),
                     "cost_model": (
-                        "parallel" if name in PARALLEL_ALGOS else "linear"
+                        "parallel"
+                        if name in PARALLEL_ALGOS
+                        else "mimo" if name in MIMO_ALGOS else "linear"
                     ),
                 }
             )

@@ -6,7 +6,15 @@ from .exact import backtracking, dp, topsort
 from .flow import Flow, ParallelPlan
 from .generators import butterfly_mimo_segments, case_study_flow, random_flow
 from .heuristics import greedy1, greedy2, partition, random_plan, swap
-from .mimo import MIMOFlow, Segment, butterfly, optimize_mimo
+from .mimo import (
+    MIMOFlow,
+    Segment,
+    butterfly,
+    flow_to_mimo,
+    is_mimo_flow,
+    mimo_to_flow,
+    optimize_mimo,
+)
 from .parallel import parallelize, pgreedy1, pgreedy2
 from .rank import kbz, ro1, ro2, ro3
 
@@ -17,5 +25,6 @@ __all__ = [
     "kbz", "ro1", "ro2", "ro3",
     "parallelize", "pgreedy1", "pgreedy2",
     "MIMOFlow", "Segment", "butterfly", "optimize_mimo",
+    "mimo_to_flow", "flow_to_mimo", "is_mimo_flow",
     "random_flow", "case_study_flow", "butterfly_mimo_segments",
 ]

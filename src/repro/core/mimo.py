@@ -14,10 +14,27 @@ inputs (then per-input reordering can move it further upstream); factorize
 pulls identical tail tasks of all join inputs after the join.  Both preserve
 results under the paper's assembly-line semantics; we apply them only when
 the estimated cost strictly decreases.
+
+A useful closed-form fact (derivable from the volume recurrence): on a
+*tree-shaped* segment DAG both moves are exactly cost-neutral at fixed
+segment orders — the join's volume scales by the moved task's selectivity
+while its per-tuple SCM scales inversely.  Strict improvement therefore
+requires either a parent feeding multiple children (diamond segment DAGs)
+or interleaving with re-ordering, which is what the device-batched search
+in ``repro.optim.mimo_batch`` exploits (its unpinned exploration moves let
+a distributed task migrate within each branch).
+
+Move legality is centralized in :func:`move_candidate` — the single
+predicate shared by the scalar ``_try_factorize``/``_try_distribute`` and
+the batched path — and task metadata travels through moves as a
+:class:`TaskRec`, so a factorized task keeps its provenance tag through a
+subsequent distribute (and vice versa).
 """
 from __future__ import annotations
 
+import copy
 import dataclasses
+import re
 from typing import Callable, Sequence
 
 import numpy as np
@@ -25,7 +42,22 @@ import numpy as np
 from .cost import scm
 from .flow import Flow
 
-__all__ = ["Segment", "MIMOFlow", "optimize_mimo", "butterfly"]
+__all__ = [
+    "Segment",
+    "MIMOFlow",
+    "TaskRec",
+    "MoveCandidate",
+    "move_candidate",
+    "apply_move",
+    "optimize_mimo",
+    "butterfly",
+    "mimo_to_flow",
+    "flow_to_mimo",
+    "flow_tags",
+    "is_mimo_flow",
+]
+
+IMPROVE_EPS = 1e-12  # strict-improvement threshold for structural moves
 
 
 @dataclasses.dataclass
@@ -44,9 +76,13 @@ class Segment:
     def selprod(self) -> float:
         return float(np.prod(self.sel))
 
+    def current_order(self) -> list[int]:
+        return (
+            self.order if self.order is not None else list(range(len(self.cost)))
+        )
+
     def per_tuple_scm(self) -> float:
-        order = self.order if self.order is not None else list(range(len(self.cost)))
-        return scm(self.flow(), order)
+        return scm(self.flow(), self.current_order())
 
 
 @dataclasses.dataclass
@@ -93,6 +129,9 @@ class MIMOFlow:
             sum(v * s.per_tuple_scm() for v, s in zip(vol, self.segments))
         )
 
+    def total_tasks(self) -> int:
+        return sum(len(s.cost) for s in self.segments)
+
 
 def _reorder_segments(
     mimo: MIMOFlow, optimizer: Callable[[Flow], tuple[list[int], float]]
@@ -106,18 +145,33 @@ def _reorder_segments(
     return changed
 
 
-def _head_task(seg: Segment) -> int | None:
-    """Index (within segment) of the first task of the current order, if it
-    has no within-segment prerequisites binding it to the head."""
-    order = seg.order if seg.order is not None else list(range(len(seg.cost)))
-    return order[0] if order else None
+# --------------------------------------------------------------- task moves
+@dataclasses.dataclass(frozen=True)
+class TaskRec:
+    """The metadata a task carries across structural moves.
+
+    The provenance ``tag`` is part of the record, so a factorized task keeps
+    its identity through a subsequent distribute (and the round trip back);
+    pop/push helpers never re-derive tags from positional context.
+    """
+
+    cost: float
+    sel: float
+    tag: int
+
+    def close_to(self, other: "TaskRec") -> bool:
+        return (
+            self.tag == other.tag
+            and np.isclose(self.cost, other.cost, rtol=1e-9, atol=0.0)
+            and np.isclose(self.sel, other.sel, rtol=1e-9, atol=0.0)
+        )
 
 
-def _pop_task(seg: Segment, idx: int) -> tuple[float, float, int]:
-    """Remove task ``idx`` from the segment; return (cost, sel, tag)."""
+def _pop_task(seg: Segment, idx: int) -> TaskRec:
+    """Remove task ``idx`` from the segment; return its :class:`TaskRec`."""
     keep = [i for i in range(len(seg.cost)) if i != idx]
     remap = {old: new for new, old in enumerate(keep)}
-    c, s, tag = float(seg.cost[idx]), float(seg.sel[idx]), seg.tags[idx]
+    rec = TaskRec(float(seg.cost[idx]), float(seg.sel[idx]), seg.tags[idx])
     seg.cost = seg.cost[keep]
     seg.sel = seg.sel[keep]
     seg.tags = [seg.tags[i] for i in keep]
@@ -126,110 +180,179 @@ def _pop_task(seg: Segment, idx: int) -> tuple[float, float, int]:
     )
     if seg.order is not None:
         seg.order = [remap[v] for v in seg.order if v != idx]
-    return c, s, tag
+    return rec
 
 
-def _push_front(seg: Segment, c: float, s: float, tag: int) -> None:
-    """Insert a task at the head of the segment (precedes everything)."""
+def _insert_task(seg: Segment, rec: TaskRec, front: bool, pin: bool) -> int:
+    """Insert ``rec``'s task at the head/tail of the segment's order.
+
+    With ``pin=True`` (the scalar optimizer's convention) precedence edges
+    tie the task to its end of the segment; ``pin=False`` leaves it free, so
+    a later re-ordering pass can migrate it (the paper's motivation for
+    distribute).  Returns the new task's index.
+    """
     n = len(seg.cost)
-    seg.cost = np.concatenate([seg.cost, [c]])
-    seg.sel = np.concatenate([seg.sel, [s]])
-    seg.tags = seg.tags + [tag]
-    seg.edges = seg.edges + tuple((n, i) for i in range(n))
-    seg.order = [n] + (seg.order if seg.order is not None else list(range(n)))
+    seg.cost = np.concatenate([seg.cost, [rec.cost]])
+    seg.sel = np.concatenate([seg.sel, [rec.sel]])
+    seg.tags = seg.tags + [rec.tag]
+    if pin:
+        pins = tuple((n, i) for i in range(n)) if front else tuple(
+            (i, n) for i in range(n)
+        )
+        seg.edges = seg.edges + pins
+    base = seg.order if seg.order is not None else list(range(n))
+    seg.order = [n] + base if front else base + [n]
+    return n
 
 
-def _append_back(seg: Segment, c: float, s: float, tag: int) -> None:
-    """Insert a task at the tail of the segment (follows everything)."""
-    n = len(seg.cost)
-    seg.cost = np.concatenate([seg.cost, [c]])
-    seg.sel = np.concatenate([seg.sel, [s]])
-    seg.tags = seg.tags + [tag]
-    seg.edges = seg.edges + tuple((i, n) for i in range(n))
-    seg.order = (seg.order if seg.order is not None else list(range(n))) + [n]
+def _push_front(seg: Segment, rec: TaskRec, pin: bool = True) -> int:
+    """Insert a task at the head of the segment (precedes everything when
+    pinned)."""
+    return _insert_task(seg, rec, front=True, pin=pin)
 
 
-def _try_distribute(mimo: MIMOFlow) -> bool:
-    """Move a join-segment head task with sel<=1 into every join input, if
-    that reduces the estimated total cost."""
-    par = mimo.seg_parents()
-    for si, seg in enumerate(mimo.segments):
-        if len(par[si]) < 2 or len(seg.cost) == 0:
-            continue
-        h = _head_task(seg)
-        if h is None or seg.sel[h] > 1.0:
-            continue
-        # only distribute a task that may start the segment (no within-seg preds)
+def _append_back(seg: Segment, rec: TaskRec, pin: bool = True) -> int:
+    """Insert a task at the tail of the segment (follows everything when
+    pinned)."""
+    return _insert_task(seg, rec, front=False, pin=pin)
+
+
+@dataclasses.dataclass(frozen=True)
+class MoveCandidate:
+    """A legal factorize/distribute move at join segment ``seg``.
+
+    ``rec`` is the moved task's record; ``tasks`` holds the task indices the
+    move removes — ``(head,)`` within ``seg`` for distribute, one tail index
+    per parent (aligned with ``parents``) for factorize.
+    """
+
+    kind: str  # "factorize" | "distribute"
+    seg: int
+    parents: tuple[int, ...]
+    rec: TaskRec
+    tasks: tuple[int, ...]
+
+
+def move_candidate(
+    mimo: MIMOFlow,
+    kind: str,
+    si: int,
+    par: "list[list[int]] | None" = None,
+) -> MoveCandidate | None:
+    """The single move-legality predicate (shared with ``optim.mimo_batch``).
+
+    Distribute at join ``si`` is legal iff the segment is a join (>= 2
+    parents), non-empty, and its head task has sel <= 1 and no within-segment
+    predecessors.  Factorize is legal iff every parent is non-empty and all
+    parent tails carry the same tag with consistent (cost, sel) records (a
+    tagged-record mismatch is rejected — distinct tasks merely sharing a tag
+    must not be merged).  Returns ``None`` when illegal.
+    """
+    if par is None:
+        par = mimo.seg_parents()
+    parents = tuple(par[si])
+    if len(parents) < 2:
+        return None
+    seg = mimo.segments[si]
+    if kind == "distribute":
+        order = seg.current_order()
+        if not order:
+            return None  # empty segment: nothing to distribute
+        h = order[0]
+        if seg.sel[h] > 1.0:
+            return None
         if any(b == h for _, b in seg.edges):
+            return None  # head is bound below a within-segment prerequisite
+        rec = TaskRec(float(seg.cost[h]), float(seg.sel[h]), seg.tags[h])
+        return MoveCandidate("distribute", si, parents, rec, (h,))
+    if kind == "factorize":
+        recs: list[TaskRec] = []
+        tails: list[int] = []
+        for pi in parents:
+            pseg = mimo.segments[pi]
+            order = pseg.current_order()
+            if not order:
+                return None  # empty parent: no shared tail to pull
+            t = order[-1]
+            recs.append(
+                TaskRec(float(pseg.cost[t]), float(pseg.sel[t]), pseg.tags[t])
+            )
+            tails.append(t)
+        if not all(recs[0].close_to(r) for r in recs[1:]):
+            return None  # tag/record mismatch across parents
+        return MoveCandidate("factorize", si, parents, recs[0], tuple(tails))
+    raise ValueError(f"unknown move kind {kind!r}")
+
+
+def apply_move(mimo: MIMOFlow, cand: MoveCandidate, pin: bool = True) -> None:
+    """Apply a legal move in place.  ``pin`` controls whether the inserted
+    task is precedence-tied to its end of the segment (scalar convention)."""
+    if cand.kind == "distribute":
+        rec = _pop_task(mimo.segments[cand.seg], cand.tasks[0])
+        for pi in cand.parents:
+            _append_back(mimo.segments[pi], rec, pin=pin)
+    elif cand.kind == "factorize":
+        for pi, t in zip(cand.parents, cand.tasks):
+            _pop_task(mimo.segments[pi], t)
+        _push_front(mimo.segments[cand.seg], cand.rec, pin=pin)
+    else:
+        raise ValueError(f"unknown move kind {cand.kind!r}")
+
+
+def _try_move(mimo: MIMOFlow, kind: str, trace: "list | None" = None) -> bool:
+    """Scan joins in index order; apply the first strictly-improving move."""
+    par = mimo.seg_parents()
+    for si in range(len(mimo.segments)):
+        cand = move_candidate(mimo, kind, si, par)
+        if cand is None:
             continue
         before = mimo.total_cost()
-        import copy
-
         trial = copy.deepcopy(mimo)
-        tseg = trial.segments[si]
-        c, s, tag = _pop_task(tseg, h)
-        for pi in par[si]:
-            _append_back(trial.segments[pi], c, s, tag)
-        if trial.total_cost() < before - 1e-12:
+        apply_move(trial, cand)
+        if trial.total_cost() < before - IMPROVE_EPS:
             mimo.segments[:] = trial.segments
             mimo.seg_edges[:] = trial.seg_edges
+            if trace is not None:
+                trace.append((kind, si))
             return True
     return False
 
 
-def _try_factorize(mimo: MIMOFlow) -> bool:
-    """If all inputs of a join end with the *same* task (by tag), pull one
+def _try_factorize(mimo: MIMOFlow, trace: "list | None" = None) -> bool:
+    """If all inputs of a join end with the *same* task (by record), pull one
     copy after the join, if that reduces the estimated total cost."""
-    par = mimo.seg_parents()
-    for si in range(len(mimo.segments)):
-        ps = par[si]
-        if len(ps) < 2:
-            continue
-        tails = []
-        for pi in ps:
-            seg = mimo.segments[pi]
-            order = seg.order if seg.order is not None else list(range(len(seg.cost)))
-            if not order:
-                break
-            t = order[-1]
-            if any(a == t for a, _ in seg.edges):  # t must come last? it does;
-                pass
-            tails.append((pi, t, seg.tags[t], float(seg.cost[t]), float(seg.sel[t])))
-        else:
-            if len({t[2] for t in tails}) == 1 and len(tails) == len(ps):
-                before = mimo.total_cost()
-                import copy
+    return _try_move(mimo, "factorize", trace)
 
-                trial = copy.deepcopy(mimo)
-                c, s, tag = 0.0, 1.0, tails[0][2]
-                for pi, t, *_ in tails:
-                    c, s, tag = _pop_task(trial.segments[pi], t)
-                _push_front(trial.segments[si], c, s, tag)
-                if trial.total_cost() < before - 1e-12:
-                    mimo.segments[:] = trial.segments
-                    mimo.seg_edges[:] = trial.seg_edges
-                    return True
-    return False
+
+def _try_distribute(mimo: MIMOFlow, trace: "list | None" = None) -> bool:
+    """Move a join-segment head task with sel<=1 into every join input, if
+    that reduces the estimated total cost."""
+    return _try_move(mimo, "distribute", trace)
 
 
 def optimize_mimo(
     mimo: MIMOFlow,
     optimizer: "str | Callable[[Flow], tuple[list[int], float]]" = "ro3",
     max_rounds: int = 10,
+    trace: "list | None" = None,
 ) -> float:
     """Algorithm 4: alternate segment re-ordering and factorize/distribute
     moves until convergence.  Returns the final estimated total cost.
 
     ``optimizer`` is a ``repro.optim`` registry name (default "ro3") or any
     legacy ``flow -> (order, cost)`` callable for the SISO segment step.
+    ``trace``, if given, collects the accepted structural moves as
+    ``(kind, join_segment)`` tuples — the differential harness in
+    ``tests/test_mimo_batch.py`` compares it move-for-move against the
+    batched search's scalar-parity lane.
     """
     from ..optim import resolve  # lazy: repro.optim imports repro.core
 
     optimizer = resolve(optimizer)
     for _ in range(max_rounds):
         changed = _reorder_segments(mimo, optimizer)
-        changed |= _try_factorize(mimo)
-        changed |= _try_distribute(mimo)
+        changed |= _try_factorize(mimo, trace)
+        changed |= _try_distribute(mimo, trace)
         if not changed:
             break
     return mimo.total_cost()
@@ -267,3 +390,139 @@ def butterfly(
             nxt.append(level[-1])
         level = nxt
     return MIMOFlow(segs, edges)
+
+
+# -------------------------------------------------------- Flow interchange
+# A MIMO flow flattens to a single ``Flow`` whose names carry the segment
+# membership and provenance tags ("s<seg>.t<tag>") that cost/sel arrays
+# cannot express (factorize legality is tag identity).  This is the
+# interchange format that lets MIMO flows travel through Flow-based
+# consumers — the optimizer registry, benchmark sweep and dry-run all see a
+# plain Flow; ``repro.optim.mimo_batch.batched_mimo`` decodes it back.
+_NAME_RE = re.compile(r"^s(\d+)\.t(-?\d+)$")
+
+
+def mimo_to_flow(mimo: MIMOFlow) -> Flow:
+    """Flatten a MIMO flow into one ``Flow``.
+
+    Tasks are concatenated segment by segment; precedence = within-segment
+    edges plus full bipartite parent-segment -> child-segment edges (every
+    upstream task precedes every downstream task, matching the volume
+    model's "segment consumes its parents' outputs" semantics).  Names
+    encode (segment, tag) so :func:`flow_to_mimo` can invert exactly.
+    """
+    if any(len(s.cost) == 0 for s in mimo.segments):
+        raise ValueError("cannot flatten a MIMO flow with empty segments")
+    offs: list[int] = []
+    n = 0
+    for s in mimo.segments:
+        offs.append(n)
+        n += len(s.cost)
+    cost = np.concatenate([s.cost for s in mimo.segments])
+    sel = np.concatenate([s.sel for s in mimo.segments])
+    names = tuple(
+        f"s{si}.t{tag}"
+        for si, s in enumerate(mimo.segments)
+        for tag in s.tags
+    )
+    edges: list[tuple[int, int]] = []
+    for si, s in enumerate(mimo.segments):
+        edges += [(offs[si] + a, offs[si] + b) for a, b in s.edges]
+    for a, b in mimo.seg_edges:
+        for u in range(len(mimo.segments[a].cost)):
+            for v in range(len(mimo.segments[b].cost)):
+                edges.append((offs[a] + u, offs[b] + v))
+    return Flow(cost=cost, sel=sel, edges=tuple(edges), names=names)
+
+
+def flow_to_mimo(flow: Flow) -> MIMOFlow:
+    """Recover the MIMO structure from a flow flattened by
+    :func:`mimo_to_flow`.  Raises ``ValueError`` if the flow carries no
+    parseable segment annotations."""
+    if not flow.names:
+        raise ValueError("flow carries no MIMO segment annotations")
+    seg_of: list[int] = []
+    tag_of: list[int] = []
+    for name in flow.names:
+        m = _NAME_RE.match(name)
+        if m is None:
+            raise ValueError(f"task name {name!r} is not a MIMO annotation")
+        seg_of.append(int(m.group(1)))
+        tag_of.append(int(m.group(2)))
+    n_seg = max(seg_of) + 1
+    members: list[list[int]] = [[] for _ in range(n_seg)]
+    for v, si in enumerate(seg_of):
+        members[si].append(v)
+    if any(not m for m in members):
+        raise ValueError("MIMO annotations skip a segment index")
+    local = {v: i for m in members for i, v in enumerate(m)}
+    segments: list[Segment] = []
+    seg_edges: list[tuple[int, int]] = []
+    seen: set[tuple[int, int]] = set()
+    for si, m in enumerate(members):
+        segments.append(
+            Segment(
+                flow.cost[m].copy(),
+                flow.sel[m].copy(),
+                (),
+                [tag_of[v] for v in m],
+                None,
+            )
+        )
+    inner: list[list[tuple[int, int]]] = [[] for _ in range(n_seg)]
+    for a, b in flow.edges:
+        sa, sb = seg_of[a], seg_of[b]
+        if sa == sb:
+            inner[sa].append((local[a], local[b]))
+        elif (sa, sb) not in seen:
+            seen.add((sa, sb))
+            seg_edges.append((sa, sb))
+    for si, seg in enumerate(segments):
+        seg.edges = tuple(inner[si])
+    mimo = MIMOFlow(segments, seg_edges)
+    if len(_seg_topo_order(mimo)) != n_seg:
+        raise ValueError("MIMO segment annotations form a cycle")
+    return mimo
+
+
+def _seg_topo_order(mimo: MIMOFlow) -> list[int]:
+    """Kahn order over the segment DAG (smallest-index ties)."""
+    n = len(mimo.segments)
+    par = mimo.seg_parents()
+    indeg = [len(p) for p in par]
+    succ: list[list[int]] = [[] for _ in range(n)]
+    for a, b in mimo.seg_edges:
+        succ[a].append(b)
+    ready = sorted(i for i in range(n) if indeg[i] == 0)
+    out: list[int] = []
+    while ready:
+        u = ready.pop(0)
+        out.append(u)
+        for w in sorted(succ[u]):
+            indeg[w] -= 1
+            if indeg[w] == 0:
+                ready.append(w)
+    return out
+
+
+def flow_tags(flow: Flow) -> list[int]:
+    """Provenance tags of a flattened MIMO flow's tasks (name parse)."""
+    out: list[int] = []
+    for name in flow.names or ():
+        m = _NAME_RE.match(name)
+        if m is None:
+            raise ValueError(f"task name {name!r} is not a MIMO annotation")
+        out.append(int(m.group(2)))
+    if len(out) != flow.n:
+        raise ValueError("flow carries no MIMO segment annotations")
+    return out
+
+
+def is_mimo_flow(flow: Flow) -> bool:
+    """True iff ``flow`` was flattened from a MIMO flow with >= 1 join
+    (the structural guard ``batched-mimo`` registers as ``supports``)."""
+    try:
+        mimo = flow_to_mimo(flow)
+    except ValueError:
+        return False
+    return any(len(p) >= 2 for p in mimo.seg_parents())

@@ -151,6 +151,12 @@ def segments_to_plan(
     """
     order = list(order)
     n = len(order)
+    # agree with cuts_feasible on degenerate vectors: a missing leading cut
+    # is an encoding error even when the decoded DAG would happen to be valid
+    # (e.g. an unconstrained flow with no cuts at all)
+    assert n == 0 or (len(cuts) == n and cuts[0]), (
+        "infeasible (order, cuts) encoding"
+    )
     parents: list[set[int]] = [set() for _ in range(n)]
     prev_members: list[int] = []
     for a, b in _segment_spans(cuts):

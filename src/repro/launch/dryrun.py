@@ -40,13 +40,26 @@ def optimizer_dryrun() -> int:
     real single-device backend, not 512 placeholder hosts, and must not
     depend on the model/sharding modules.
     """
-    from ..core.generators import case_study_flow, random_flow
+    from ..core.generators import (
+        butterfly_mimo_segments,
+        case_study_flow,
+        random_flow,
+    )
+    from ..core.mimo import butterfly, flow_to_mimo, mimo_to_flow, optimize_mimo
     from ..core.parallel import pgreedy2
     from ..optim import get_optimizer, list_optimizers
 
     flows = [
         ("case_study", case_study_flow()),
         ("random_n40_pc40", random_flow(40, 0.4, rng=0)),
+        # a flattened §5 butterfly: exercises batched-mimo's supports() guard
+        # (the other flows make it report [skip]) and its never-worse gate
+        (
+            "butterfly_4x6",
+            mimo_to_flow(
+                butterfly(butterfly_mimo_segments(4, 6, 0.4, rng=0))
+            ),
+        ),
     ]
     failures = 0
     for fname, f in flows:
@@ -57,6 +70,12 @@ def optimizer_dryrun() -> int:
         # never lose to (its row 0 replays ro3's move policy exactly)
         _, scm_ro3 = get_optimizer("ro3").raw(f)
         print(f"[ref]  ro3-scalar      scm={scm_ro3:10.3f}", flush=True)
+        scm_mimo = None
+        if fname.startswith("butterfly"):
+            # scalar §5 baseline the batched MIMO search must never lose to
+            # (its member 0 replays optimize_mimo's move policy exactly)
+            scm_mimo = optimize_mimo(flow_to_mimo(f), "ro3")
+            print(f"[ref]  mimo-scalar     scm={scm_mimo:10.3f}", flush=True)
         for name in list_optimizers():
             opt = get_optimizer(name)
             if not opt.supports(f):
@@ -90,6 +109,18 @@ def optimizer_dryrun() -> int:
                 print(
                     f"[FAIL] {name}: scm {r.scm:.3f} worse than scalar "
                     f"ro3 {scm_ro3:.3f}",
+                    file=sys.stderr,
+                )
+                continue
+            if (
+                name == "batched-mimo"
+                and scm_mimo is not None
+                and r.scm > scm_mimo + 1e-9
+            ):
+                failures += 1
+                print(
+                    f"[FAIL] {name}: cost {r.scm:.3f} worse than scalar "
+                    f"optimize_mimo {scm_mimo:.3f}",
                     file=sys.stderr,
                 )
                 continue

@@ -8,7 +8,7 @@ from __future__ import annotations
 
 from ..core import exact, heuristics, rank
 from ..core.flow import Flow
-from . import batched, parallel_batch
+from . import batched, mimo_batch, parallel_batch
 from .api import (
     APPROXIMATE,
     BATCHABLE,
@@ -133,6 +133,23 @@ register(
     tags={APPROXIMATE, HANDLES_CONSTRAINTS, BATCHABLE, STOCHASTIC},
     doc="Registry-seeded portfolio + mutate-and-select generations with "
     "device-batched SCM evaluation.",
+)
+
+# ----------------------------------------- MIMO flows, §5 (device-batched)
+# Operates on *flattened* MIMO flows (core.mimo.mimo_to_flow annotates
+# tasks with their segment/provenance tags); the butterfly guard rejects
+# flows without parseable annotations or without a join.  The reported cost
+# is the §5 MIMO cost model (union-merge volumes), not the returned order's
+# linear SCM; linear consumers re-score before switching (see
+# pipeline.adaptive).
+register(
+    "batched-mimo",
+    mimo_batch.batched_mimo,
+    tags={APPROXIMATE, BATCHABLE},
+    supports=mimo_batch.supports_batched_mimo,
+    doc="Population-batched §5 factorize/distribute + per-segment RO-III "
+    "over an encoded MIMO population; member 0 replays scalar optimize_mimo "
+    "move-for-move, so it is never worse than the scalar §5 search.",
 )
 
 # ------------------------------------- parallel plans, §6 (device-batched)

@@ -244,25 +244,45 @@ def block_move_pass_batch(
     """Refine every row of ``orders`` (B, n) with the RO-III block-move local
     search; returns (refined orders, their SCMs).
 
-    ``kernel=True`` dispatches to the fused Pallas sweep
-    (``kernels.ops.block_move_sweep``) instead of the vmapped state machine —
-    identical move policy and fixpoints, far fewer sequential device steps.
-    ``return_steps=True`` appends the per-row while-loop iteration count
-    (probes for the vmapped machine, accepted moves + sweep checks for the
-    kernel) — the device-pass metric ``bench_kernels`` compares.
+    ``cost``/``sel`` may be (n,) shared across rows or (B, n) per-row (with
+    ``pred`` (B, n, n)) — the per-row form is what ``optim.mimo_batch`` uses
+    to refine every segment of a MIMO population in one call, each row being
+    a different sub-flow.  ``kernel=True`` dispatches to the fused Pallas
+    sweep (``kernels.ops.block_move_sweep``) instead of the vmapped state
+    machine — identical move policy and fixpoints, far fewer sequential
+    device steps (shared-metadata form only).  ``return_steps=True`` appends
+    the per-row while-loop iteration count (probes for the vmapped machine,
+    accepted moves + sweep checks for the kernel) — the device-pass metric
+    ``bench_kernels`` compares.
     """
+    per_row = cost.ndim == 2
     if kernel:
+        if per_row:
+            raise ValueError(
+                "kernel=True requires shared (n,) cost/sel metadata"
+            )
         from ..kernels.ops import block_move_sweep
 
         refined, steps = block_move_sweep(
             cost, sel, pred, orders, k=k, max_rounds=max_rounds
         )
+    elif per_row:
+        row = functools.partial(_block_move_pass_row, k=k, max_rounds=max_rounds)
+        refined, steps = jax.vmap(row)(cost, sel, pred, orders)
     else:
         row = functools.partial(
             _block_move_pass_row, cost, sel, pred, k=k, max_rounds=max_rounds
         )
         refined, steps = jax.vmap(row)(orders)
-    costs = scm_batch(cost, sel, refined)
+    if per_row:
+        c = jnp.take_along_axis(cost, refined, axis=1)
+        s = jnp.take_along_axis(sel, refined, axis=1)
+        prefix = jnp.concatenate(
+            [jnp.ones_like(s[:, :1]), jnp.cumprod(s[:, :-1], axis=-1)], axis=-1
+        )
+        costs = jnp.sum(c * prefix, axis=-1)
+    else:
+        costs = scm_batch(cost, sel, refined)
     if return_steps:
         return refined, costs, steps
     return refined, costs

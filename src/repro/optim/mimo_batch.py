@@ -1,0 +1,567 @@
+"""Device-batched MIMO (§5) move-set substrate (EXPERIMENTS.md §Perf).
+
+PR 1 batched linear plan search and PR 2 the §6 parallel plans; this module
+moves the last scalar family — the §5 MIMO factorize/distribute search of
+``core.mimo`` — onto the batched substrate.  A population of candidate MIMO
+states evaluates per device call:
+
+* **Fixed-shape array encoding** — a MIMO population is (B, S, T) lanes:
+  per-segment cost/sel/tag rows padded with neutral tasks (cost 0, sel 1,
+  tag -1), a (B, S, T, T) within-segment precedence closure whose pad lanes
+  are pinned *after* every real task, per-segment lane permutations, and the
+  (S, S) segment-parent matrix (static: structural moves relocate tasks but
+  never touch segment-level edges).
+* ``mimo_cost_batch`` — the pure-jnp closed-form oracle: per-segment
+  per-tuple SCM (gather + exclusive cumprod + dot) and selectivity products
+  feed an S-step volume propagation over the segment DAG,
+  ``vol = src + A @ (vol * sp)``; in float64 it matches
+  ``MIMOFlow.total_cost`` to ~1 ulp (parity budget 1e-9).
+* **In-segment re-ordering** reuses ``optim.batched.block_move_pass_batch``
+  in its per-row-metadata form: every segment of every population member is
+  one row of the vmapped RO-III block-move machine, so all B*S segments
+  hill-climb in a single device call.  Pad lanes are provably inert (a
+  pad-only block's move delta is exactly 0, mixed/real blocks cannot jump
+  the pad pins), so a row seeded with the segment's RO-II order reproduces
+  scalar ``ro3`` move for move.
+* ``mimo_scores_batch`` — delta-scored structural moves: factorize and
+  distribute only touch the affected segments' (selprod, per-tuple SCM)
+  summaries, so a trial's total is closed-form from the base summaries plus
+  one volume propagation; all (member, join, kind) candidates score in one
+  device call.  On tree-shaped segment DAGs both moves are exactly
+  cost-neutral at fixed orders (see ``core.mimo``), so the batched search's
+  edge comes from *unpinned* exploration moves — a distributed task is left
+  free so the next re-ordering pass can migrate it upstream — and from
+  population restarts of the per-segment climb.
+* ``batched_optimize_mimo`` / ``batched_mimo`` — the population search and
+  its registry entry.  Member 0 is the scalar-parity lane: its segments are
+  re-seeded from RO-II and device-refined (== scalar ``ro3``) and its
+  structural moves replay ``core.mimo``'s scan policy through the shared
+  :func:`core.mimo.move_candidate` legality predicate, so the result is
+  never worse than scalar ``optimize_mimo`` and the differential harness
+  (``tests/test_mimo_batch.py``) pins it move-for-move.
+"""
+from __future__ import annotations
+
+import copy
+import dataclasses
+import random
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import enable_x64
+
+from ..core.flow import Flow
+from ..core.mimo import (
+    IMPROVE_EPS,
+    MIMOFlow,
+    _seg_topo_order,
+    _try_distribute,
+    _try_factorize,
+    apply_move,
+    flow_tags,
+    flow_to_mimo,
+    is_mimo_flow,
+    move_candidate,
+)
+from ..core.rank import ro2
+from .batched import block_move_pass_batch
+
+__all__ = [
+    "encode_mimo",
+    "encode_population",
+    "mimo_cost_batch",
+    "mimo_scores_batch",
+    "mimo_cost_population",
+    "segment_reorder_population",
+    "MIMOBatchResult",
+    "batched_optimize_mimo",
+    "batched_mimo",
+    "supports_batched_mimo",
+]
+
+
+# ----------------------------------------------------------- array encoding
+def encode_mimo(mimo: MIMOFlow, T: int | None = None) -> dict[str, np.ndarray]:
+    """Encode one MIMO state as fixed-shape (S, T) lane arrays.
+
+    Pad lanes carry the neutral task (cost 0, sel 1, tag -1) and are pinned
+    after every real task in the precedence closure, so both the cost oracle
+    and the block-move machine treat them as inert trailing lanes.
+    """
+    S = len(mimo.segments)
+    sizes = [len(s.cost) for s in mimo.segments]
+    if T is None:
+        T = max(1, max(sizes, default=1))
+    if max(sizes, default=0) > T:
+        raise ValueError(f"segment of size {max(sizes)} exceeds T={T}")
+    cost = np.zeros((S, T))
+    sel = np.ones((S, T))
+    tags = np.full((S, T), -1, dtype=np.int64)
+    pred = np.zeros((S, T, T), dtype=bool)
+    order = np.tile(np.arange(T, dtype=np.int32), (S, 1))
+    for si, seg in enumerate(mimo.segments):
+        m = sizes[si]
+        if m == 0:
+            continue
+        cost[si, :m] = seg.cost
+        sel[si, :m] = seg.sel
+        tags[si, :m] = seg.tags
+        fl = seg.flow()
+        for v in range(m):
+            for p in fl.preds(v):
+                pred[si, p, v] = True
+        pred[si, :m, m:] = True  # pads are pinned after every real task
+        order[si, :m] = seg.current_order()
+    return {"cost": cost, "sel": sel, "tags": tags, "pred": pred, "order": order}
+
+
+def encode_population(
+    mimos: "list[MIMOFlow]", T: int | None = None
+) -> dict[str, np.ndarray]:
+    """Stack :func:`encode_mimo` over a population -> (B, S, T...) arrays."""
+    if T is None:
+        T = max(
+            1,
+            max(
+                (len(s.cost) for m in mimos for s in m.segments), default=1
+            ),
+        )
+    parts = [encode_mimo(m, T) for m in mimos]
+    return {k: np.stack([p[k] for p in parts]) for k in parts[0]}
+
+
+def seg_parent_matrix(mimo: MIMOFlow) -> np.ndarray:
+    """(S, S) bool: ``[d, p]`` iff segment p is a direct parent of d."""
+    S = len(mimo.segments)
+    par = np.zeros((S, S), dtype=bool)
+    for a, b in mimo.seg_edges:
+        par[b, a] = True
+    return par
+
+
+# ------------------------------------------------------------ device kernels
+def _summaries(cost, sel, orders):
+    """Per-segment (selprod, per-tuple SCM) from lane arrays, any batch dims."""
+    c = jnp.take_along_axis(cost, orders, axis=-1)
+    s = jnp.take_along_axis(sel, orders, axis=-1)
+    Sx = jnp.concatenate(
+        [jnp.ones_like(s[..., :1]), jnp.cumprod(s[..., :-1], axis=-1)], axis=-1
+    )
+    pscm = jnp.sum(c * Sx, axis=-1)
+    sp = jnp.prod(s, axis=-1)
+    return sp, pscm
+
+
+def _volumes(sp, seg_par):
+    """Segment input volumes: ``vol = src + A @ (vol * sp)``, S iterations.
+
+    ``sp`` is (..., S); ``seg_par`` the (S, S) parent matrix.  S iterations
+    cover every path of the (acyclic) segment DAG, reproducing the scalar
+    topological accumulation of ``MIMOFlow.volumes``.
+    """
+    A = seg_par.astype(sp.dtype)
+    src = (~jnp.any(seg_par, axis=1)).astype(sp.dtype)
+    S = sp.shape[-1]
+
+    def body(_, vol):
+        return src + jnp.einsum("dp,...p->...d", A, vol * sp)
+
+    return jax.lax.fori_loop(0, S, body, jnp.zeros_like(sp))
+
+
+@jax.jit
+def mimo_cost_batch(cost, sel, orders, seg_par):
+    """Total MIMO cost of each encoded population member.
+
+    ``cost``/``sel`` (B, S, T), ``orders`` (B, S, T) int32 lane permutations,
+    ``seg_par`` (S, S) bool.  Pure-jnp closed form of
+    ``MIMOFlow.total_cost``; in f64 the two agree to ~1 ulp (tests budget
+    1e-9) — the reduction order of the volume matmul can differ from the
+    scalar Kahn accumulation.
+    """
+    sp, pscm = _summaries(cost, sel, orders)
+    return jnp.sum(_volumes(sp, seg_par) * pscm, axis=-1)
+
+
+@jax.jit
+def mimo_scores_batch(
+    cost, sel, orders, seg_par, join_onehot, join_par, move_c, move_s, legal
+):
+    """Base totals + trial totals of every candidate structural move.
+
+    ``join_onehot``/``join_par`` are (J, S) bool rows (the join segment and
+    its parents); ``move_c``/``move_s`` (B, J, 2) hold the moved task's
+    (cost, sel) per candidate — kind 0 = distribute (the join head), kind 1
+    = factorize (the shared parent tail) — and ``legal`` (B, J, 2) masks
+    illegal candidates (scored ``inf``).  Moves only touch the affected
+    segments' (selprod, per-tuple SCM) summaries:
+
+      distribute: pscm_j' = (pscm_j - c)/s, sp_j' = sp_j/s,
+                  pscm_p' = pscm_p + sp_p*c, sp_p' = sp_p*s
+      factorize:  pscm_p' = pscm_p - (sp_p/s)*c, sp_p' = sp_p/s,
+                  pscm_j' = c + s*pscm_j,        sp_j' = sp_j*s
+
+    so each trial total is one closed-form volume propagation — all
+    (member, join, kind) candidates in a single device call.
+    """
+    sp, pscm = _summaries(cost, sel, orders)  # (B, S)
+    base = jnp.sum(_volumes(sp, seg_par) * pscm, axis=-1)  # (B,)
+    oh = join_onehot[None]  # (1, J, S)
+    parm = join_par[None]
+    sp_b = sp[:, None, :]
+    pscm_b = pscm[:, None, :]
+
+    def trial_total(sp_t, pscm_t):
+        return jnp.sum(_volumes(sp_t, seg_par) * pscm_t, axis=-1)  # (B, J)
+
+    c_d, s_d = move_c[..., 0:1], move_s[..., 0:1]  # (B, J, 1)
+    sp_d = jnp.where(oh, sp_b / s_d, jnp.where(parm, sp_b * s_d, sp_b))
+    pscm_d = jnp.where(
+        oh, (pscm_b - c_d) / s_d, jnp.where(parm, pscm_b + sp_b * c_d, pscm_b)
+    )
+    c_f, s_f = move_c[..., 1:2], move_s[..., 1:2]
+    sp_f = jnp.where(oh, sp_b * s_f, jnp.where(parm, sp_b / s_f, sp_b))
+    pscm_f = jnp.where(
+        oh, c_f + s_f * pscm_b, jnp.where(parm, pscm_b - sp_b / s_f * c_f, pscm_b)
+    )
+    scores = jnp.stack([trial_total(sp_d, pscm_d), trial_total(sp_f, pscm_f)], -1)
+    return base, jnp.where(legal, scores, jnp.inf)
+
+
+# ------------------------------------------------------------- host wrappers
+def mimo_cost_population(
+    mimos: "list[MIMOFlow]", T: int | None = None
+) -> np.ndarray:
+    """Device-evaluate a population of MIMO states in one call (f64).
+
+    All members must share the segment DAG of ``mimos[0]`` (structural
+    moves never change it)."""
+    enc = encode_population(mimos, T)
+    seg_par = seg_parent_matrix(mimos[0])
+    with enable_x64():
+        out = mimo_cost_batch(
+            jnp.asarray(enc["cost"], dtype=jnp.float64),
+            jnp.asarray(enc["sel"], dtype=jnp.float64),
+            jnp.asarray(enc["order"]),
+            jnp.asarray(seg_par),
+        )
+        return np.asarray(out)
+
+
+def segment_reorder_population(
+    enc: dict[str, np.ndarray], k: int = 5, max_rounds: int = 50
+) -> np.ndarray:
+    """Refine every segment of every member in one device call.
+
+    Flattens the (B, S, T) encoding into B*S rows of the per-row-metadata
+    ``block_move_pass_batch`` (the vmapped RO-III machine); rows seeded with
+    a segment's RO-II order come back as scalar ``ro3``'s order.  Returns
+    refined (B, S, T) lane permutations.
+    """
+    B, S, T = enc["order"].shape
+    with enable_x64():
+        refined, _ = block_move_pass_batch(
+            jnp.asarray(enc["cost"].reshape(B * S, T), dtype=jnp.float64),
+            jnp.asarray(enc["sel"].reshape(B * S, T), dtype=jnp.float64),
+            jnp.asarray(enc["pred"].reshape(B * S, T, T)),
+            jnp.asarray(enc["order"].reshape(B * S, T)),
+            k=k,
+            max_rounds=max_rounds,
+        )
+        return np.asarray(refined).reshape(B, S, T)
+
+
+# --------------------------------------------------------- population search
+@dataclasses.dataclass
+class MIMOBatchResult:
+    """Outcome of :func:`batched_optimize_mimo`."""
+
+    cost: float  # best total cost found (host f64 re-score)
+    mimo: MIMOFlow  # the best state
+    scalar_cost: float  # member 0 == scalar optimize_mimo(..., "ro3")
+    scalar_mimo: MIMOFlow
+    trace: list  # member 0's accepted structural moves
+    member: int  # winning member index
+    rounds: int
+    population: int
+
+
+def _round_T(mimos: "list[MIMOFlow]") -> int:
+    """Lane capacity: current max segment size, rounded up to a multiple of
+    4 so structural growth recompiles the device kernels rarely."""
+    m = max((len(s.cost) for mm in mimos for s in mm.segments), default=1)
+    return max(4, -4 * (-m // 4))
+
+
+def _set_orders(mimo: MIMOFlow, rows: np.ndarray) -> bool:
+    """Write refined lane rows back into a mirror; True if any order moved."""
+    changed = False
+    for si, seg in enumerate(mimo.segments):
+        m = len(seg.cost)
+        order = [int(v) for v in rows[si][:m]]
+        assert sorted(order) == list(range(m)), "pad lane escaped the suffix"
+        if order != seg.order:
+            seg.order = order
+            changed = True
+    return changed
+
+
+def _candidates(mimo: MIMOFlow, joins: "list[int]", par):
+    """Legality + moved-task records for every (join, kind), via the shared
+    ``core.mimo.move_candidate`` predicate."""
+    J = len(joins)
+    move_c = np.zeros((J, 2))
+    move_s = np.ones((J, 2))
+    legal = np.zeros((J, 2), dtype=bool)
+    cands: list[list] = [[None, None] for _ in range(J)]
+    for ji, si in enumerate(joins):
+        for kind_i, kind in enumerate(("distribute", "factorize")):
+            cand = move_candidate(mimo, kind, si, par)
+            if cand is None:
+                continue
+            cands[ji][kind_i] = cand
+            move_c[ji, kind_i] = cand.rec.cost
+            move_s[ji, kind_i] = cand.rec.sel
+            legal[ji, kind_i] = True
+    return move_c, move_s, legal, cands
+
+
+def batched_optimize_mimo(
+    mimo: MIMOFlow,
+    population: int = 32,
+    max_rounds: int = 10,
+    k: int = 5,
+    seed: int = 0,
+    explore: bool = True,
+) -> MIMOBatchResult:
+    """Population-batched Algorithm 4 over the §5 MIMO move set.
+
+    Member 0 is the scalar-parity lane: per round its segments re-seed from
+    RO-II and device-refine (== scalar ``ro3``), then ``core.mimo``'s
+    factorize/distribute scan runs on its host mirror — so member 0's final
+    state *is* ``optimize_mimo(mimo, "ro3")`` and the result is never worse
+    than scalar.  Members 1.. explore: random per-segment restarts of the
+    device block-move climb, structural moves picked from the device-scored
+    candidate matrix (best strictly-improving first), and — because both
+    move kinds are cost-neutral on tree DAGs at fixed orders — occasional
+    *neutral* unpinned distributes whose payoff the next re-ordering round
+    collects.  The input is not mutated; every candidate state is re-scored
+    on the host in f64 before it can win.
+    """
+    B = max(1, population)
+    members = [copy.deepcopy(mimo) for _ in range(B)]
+    rngs = [random.Random(seed * 100003 + b) for b in range(B)]
+    seg_par = seg_parent_matrix(mimo)
+    joins = [si for si in range(len(mimo.segments)) if seg_par[si].sum() >= 2]
+    J = len(joins)
+    join_onehot = np.zeros((J, len(mimo.segments)), dtype=bool)
+    join_par = np.zeros((J, len(mimo.segments)), dtype=bool)
+    for ji, si in enumerate(joins):
+        join_onehot[ji, si] = True
+        join_par[ji] = seg_par[si]
+    seg_par_d = jnp.asarray(seg_par)
+
+    trace: list = []  # member 0's accepted structural moves
+    active = [True] * B
+    neutral_budget = [0] + [max(2, 2 * J)] * (B - 1)
+    best_cost = mimo.total_cost()
+    best_state = copy.deepcopy(mimo)
+    best_member = -1
+    rounds = 0
+    for rnd in range(max_rounds):
+        if not any(active):
+            break
+        rounds = rnd + 1
+        # ---- 1. per-segment re-ordering: one device call for all B*S rows
+        # member 0's "order changed" must mirror _reorder_segments, which
+        # compares against the pre-round order (None counts as changed) —
+        # snapshot it before the RO-II reseed overwrites it
+        prev0 = [
+            None if seg.order is None else list(seg.order)
+            for seg in members[0].segments
+        ]
+        for b, m in enumerate(members):
+            if not active[b]:
+                continue
+            for seg in m.segments:
+                if b == 0:
+                    seg.order = ro2(seg.flow())[0]  # scalar ro3's seed
+                elif rnd == 0:
+                    seg.order = seg.flow().topological_order(rngs[b])
+        enc = encode_population(members, _round_T(members))
+        refined = segment_reorder_population(enc, k=k)
+        order_changed = [
+            _set_orders(m, refined[b]) if active[b] else False
+            for b, m in enumerate(members)
+        ]
+        if active[0]:
+            order_changed[0] = any(
+                seg.order != pre
+                for seg, pre in zip(members[0].segments, prev0)
+            )
+        # ---- 2. structural moves
+        moved = [False] * B
+        if active[0]:
+            changed = _try_factorize(members[0], trace)
+            changed |= _try_distribute(members[0], trace)
+            moved[0] = changed
+        if J and B > 1 and any(active[1:]):
+            mc = np.zeros((B, J, 2))
+            ms = np.ones((B, J, 2))
+            lg = np.zeros((B, J, 2), dtype=bool)
+            cands: list = [None] * B
+            for b in range(1, B):
+                if not active[b]:
+                    continue
+                par = members[b].seg_parents()
+                mc[b], ms[b], lg[b], cands[b] = _candidates(
+                    members[b], joins, par
+                )
+            # reuse the step-1 encode with the refined orders: explorer
+            # metadata is unchanged since then, and member 0's rows (stale
+            # after its structural moves) are never read — lg[0] is False
+            # and the b-loop below starts at 1
+            with enable_x64():
+                base, scores = mimo_scores_batch(
+                    jnp.asarray(enc["cost"], dtype=jnp.float64),
+                    jnp.asarray(enc["sel"], dtype=jnp.float64),
+                    jnp.asarray(refined.astype(np.int32)),
+                    seg_par_d,
+                    jnp.asarray(join_onehot),
+                    jnp.asarray(join_par),
+                    jnp.asarray(mc),
+                    jnp.asarray(ms),
+                    jnp.asarray(lg),
+                )
+                base = np.asarray(base)
+                scores = np.asarray(scores)
+            for b in range(1, B):
+                if not active[b] or cands[b] is None:
+                    continue
+                flat = scores[b].reshape(-1)
+                order_idx = np.argsort(flat)
+                picked = None
+                scale = max(1.0, abs(base[b]))
+                for fi in order_idx:
+                    ji, kind_i = divmod(int(fi), 2)
+                    cand = cands[b][ji][kind_i]
+                    if cand is None or not np.isfinite(flat[fi]):
+                        break
+                    if flat[fi] < base[b] - IMPROVE_EPS:
+                        picked = cand
+                        break
+                    if (
+                        explore
+                        and neutral_budget[b] > 0
+                        and kind_i == 0  # neutral distributes seed migration
+                        and abs(flat[fi] - base[b]) <= 1e-9 * scale
+                        and rngs[b].random() < 0.5
+                    ):
+                        neutral_budget[b] -= 1
+                        picked = cand
+                        break
+                    break  # sorted: nothing better follows
+                if picked is not None:
+                    apply_move(members[b], picked, pin=False)
+                    moved[b] = True
+        # ---- 3. convergence + best tracking (host f64 re-score)
+        for b in range(B):
+            if not active[b]:
+                continue
+            c = members[b].total_cost()
+            if c < best_cost - IMPROVE_EPS:
+                best_cost = c
+                best_state = copy.deepcopy(members[b])
+                best_member = b
+            if not (order_changed[b] or moved[b]):
+                active[b] = False
+    scalar_cost = members[0].total_cost()
+    if scalar_cost <= best_cost:
+        best_cost, best_state, best_member = (
+            scalar_cost,
+            copy.deepcopy(members[0]),
+            0,
+        )
+    return MIMOBatchResult(
+        cost=float(best_cost),
+        mimo=best_state,
+        scalar_cost=float(scalar_cost),
+        scalar_mimo=members[0],
+        trace=trace,
+        member=best_member,
+        rounds=rounds,
+        population=B,
+    )
+
+
+# ------------------------------------------------------- registry optimizer
+def _linearize(flow: Flow, mimo: MIMOFlow) -> "list[int]":
+    """A valid linear order of the *original* flattened flow reflecting the
+    optimized MIMO state.
+
+    Structural moves replicate (distribute) or merge (factorize) tasks, so
+    lanes map back to original tasks by provenance tag: walk the optimized
+    segments in topological order to rank tags, then emit the original
+    tasks greedily by (tag rank, id) under the original PC closure.
+    """
+    prio: dict[int, int] = {}
+    p = 0
+    for si in _seg_topo_order(mimo):
+        seg = mimo.segments[si]
+        for lane in seg.current_order():
+            tag = seg.tags[lane]
+            if tag not in prio:
+                prio[tag] = p
+                p += 1
+    tags = flow_tags(flow)
+    n = flow.n
+    placed = 0
+    out: list[int] = []
+    remaining = set(range(n))
+    while remaining:
+        best = None
+        best_key = None
+        for v in remaining:
+            if flow.pred_mask[v] & ~placed:
+                continue
+            key = (prio.get(tags[v], n + len(prio)), v)
+            if best_key is None or key < best_key:
+                best, best_key = v, key
+        assert best is not None, "original PC closure is cyclic"
+        out.append(best)
+        placed |= 1 << best
+        remaining.remove(best)
+    return out
+
+
+def batched_mimo(
+    flow: Flow,
+    population: int = 32,
+    max_rounds: int = 10,
+    seed: int = 0,
+    k: int = 5,
+) -> tuple[list[int], float]:
+    """Registry entry: batched §5 MIMO search on a flattened MIMO flow.
+
+    ``flow`` must carry MIMO segment annotations (``core.mimo.mimo_to_flow``;
+    the ``supports`` guard is ``is_mimo_flow``).  Returns (a valid linear
+    order of the flattened flow reflecting the optimized state, the MIMO
+    total cost).  The reported cost is the §5 *MIMO* cost model (union-merge
+    volumes), not the order's linear SCM — consumers that execute plans
+    linearly re-score with ``core.cost.scm`` before switching (see
+    ``pipeline.adaptive``); member 0's scalar-parity lane makes the cost
+    never worse than scalar ``optimize_mimo(flow_to_mimo(flow), "ro3")``.
+    """
+    mimo = flow_to_mimo(flow)
+    res = batched_optimize_mimo(
+        mimo, population=population, max_rounds=max_rounds, seed=seed, k=k
+    )
+    order = _linearize(flow, res.mimo)
+    assert flow.is_valid_order(order)
+    return order, res.cost
+
+
+def supports_batched_mimo(flow: Flow) -> bool:
+    """Structural guard for the ``batched-mimo`` registry entry."""
+    return is_mimo_flow(flow)

@@ -8,6 +8,7 @@ from repro.core import (
     Flow, butterfly, butterfly_mimo_segments, optimize_mimo, parallelize,
     pgreedy1, pgreedy2, random_flow, ro3, scm, scm_parallel,
 )
+from repro.core.parallel import cuts_feasible, segments_to_plan
 
 
 @given(
@@ -58,6 +59,48 @@ def test_pgreedy_valid(seed):
     p2, c2 = pgreedy2(f)
     assert p1.is_valid() and p2.is_valid()
     assert c1 > 0 and c2 > 0
+
+
+# ------------------------------------------------- degenerate cut vectors
+def _degenerate_cuts(kind: str, n: int) -> list[int]:
+    if kind == "all-singleton":
+        return [1] * n  # every task its own segment: the linear chain
+    if kind == "single-run":
+        return [1] + [0] * (n - 1)  # one segment spanning the whole order
+    if kind == "no-leading-cut":
+        return [0] * n  # position 0 must start a segment: never feasible
+    raise ValueError(kind)
+
+
+@pytest.mark.parametrize(
+    "kind", ["all-singleton", "single-run", "no-leading-cut"]
+)
+@pytest.mark.parametrize("n,pc,seed", [(1, 0.0, 0), (6, 0.0, 1), (9, 0.4, 2)])
+def test_degenerate_cut_vectors(kind, n, pc, seed):
+    """cuts_feasible and segments_to_plan must agree on degenerate vectors:
+    a feasible pair decodes to a valid plan, an infeasible one refuses."""
+    f = random_flow(n, pc, rng=seed)
+    order = f.topological_order()
+    cuts = _degenerate_cuts(kind, n)
+    feasible = cuts_feasible(f, order, cuts)
+    if feasible:
+        plan = segments_to_plan(f, order, cuts)
+        assert plan.is_valid()
+        if kind == "all-singleton":
+            # the all-singleton vector is always feasible and decodes to the
+            # linear chain, whose parallel SCM is the linear SCM exactly
+            assert scm_parallel(plan, mc=0.0) == pytest.approx(scm(f, order))
+        else:  # a feasible single-run means no constrained pair at all
+            assert all(not f.preds(v) for v in order)
+    else:
+        with pytest.raises(AssertionError):
+            segments_to_plan(f, order, cuts)
+    if kind == "all-singleton":
+        assert feasible  # the linear chain is feasible for every flow
+    if kind == "no-leading-cut":
+        assert not feasible
+    if kind == "single-run" and n > 1 and pc > 0:
+        assert not feasible  # PC pairs cannot share one segment
 
 
 def test_mimo_optimization_reduces_cost():

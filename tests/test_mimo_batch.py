@@ -1,0 +1,487 @@
+"""Differential oracle harness for the batched MIMO (§5) move-set.
+
+Pins the device-batched search (``repro.optim.mimo_batch``) against the
+scalar ``core.mimo.optimize_mimo`` *move for move* in float64 — total
+costs, per-segment orders and the accepted factorize/distribute sequences —
+plus the structural invariants the §5 moves must preserve (sink volumes on
+tree DAGs, the segment DAG staying a DAG, cost monotone non-increasing per
+accepted round), and backfills direct unit coverage for ``core.mimo``'s
+internals (move legality edges, tag provenance through pop/push, the
+``butterfly`` generator's shape properties).
+"""
+import copy
+import random
+
+import numpy as np
+import pytest
+
+from repro import optim
+from repro.core import (
+    butterfly,
+    butterfly_mimo_segments,
+    case_study_flow,
+    flow_to_mimo,
+    is_mimo_flow,
+    mimo_to_flow,
+    optimize_mimo,
+    random_flow,
+    scm,
+)
+from repro.core.mimo import (
+    MIMOFlow,
+    Segment,
+    TaskRec,
+    _append_back,
+    _pop_task,
+    _push_front,
+    _seg_topo_order,
+    apply_move,
+    flow_tags,
+    move_candidate,
+)
+from repro.core.rank import block_move_pass, ro2
+from repro.optim.mimo_batch import (
+    batched_mimo,
+    batched_optimize_mimo,
+    encode_mimo,
+    encode_population,
+    mimo_cost_population,
+    seg_parent_matrix,
+)
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # seeded differential tests must run regardless
+    HAVE_HYPOTHESIS = False
+
+
+# ------------------------------------------------------------- flow builders
+def _seg_from_flow(f, tag0):
+    return Segment(
+        f.cost.copy(), f.sel.copy(), f.edges, [tag0 + t for t in range(f.n)]
+    )
+
+
+def make_butterfly(n_seg=4, seg_size=6, pc=0.4, rng=0):
+    return butterfly(butterfly_mimo_segments(n_seg, seg_size, pc, rng=rng))
+
+
+def make_diamond(seed):
+    """Two sources feeding two joins feeding a sink — the segment DAG where
+    factorize/distribute deltas are non-zero (a parent feeds two children),
+    so the scalar optimizer actually accepts structural moves."""
+    rng = np.random.default_rng(seed)
+    segs = [
+        _seg_from_flow(random_flow(4, 0.3, rng=rng, sel_range=(0.3, 1.8)), 100),
+        _seg_from_flow(random_flow(4, 0.3, rng=rng, sel_range=(0.3, 1.8)), 200),
+        _seg_from_flow(random_flow(3, 0.2, rng=rng, sel_range=(0.3, 0.9)), 300),
+        _seg_from_flow(random_flow(3, 0.2, rng=rng, sel_range=(0.3, 0.9)), 400),
+        Segment(np.array([1.0]), np.array([1.0]), (), [999]),
+    ]
+    return MIMOFlow(segs, [(0, 2), (1, 2), (0, 3), (1, 3), (2, 4), (3, 4)])
+
+
+def sink_output_volume(mimo):
+    """Total output volume of the flow's sink segments."""
+    vol = mimo.volumes()
+    has_child = {a for a, _ in mimo.seg_edges}
+    return sum(
+        vol[i] * mimo.segments[i].selprod()
+        for i in range(len(mimo.segments))
+        if i not in has_child
+    )
+
+
+def assert_differential(mimo, seed=0, population=6):
+    """The harness core: batched member 0 == scalar, batched best <= scalar."""
+    scalar = copy.deepcopy(mimo)
+    trace_scalar = []
+    c_scalar = optimize_mimo(scalar, "ro3", trace=trace_scalar)
+    res = batched_optimize_mimo(copy.deepcopy(mimo), population=population, seed=seed)
+    # f64 cost parity (acceptance budget 1e-9)
+    assert res.scalar_cost == pytest.approx(c_scalar, rel=1e-9, abs=1e-9)
+    # segment orders and task provenance match segment by segment
+    for sa, sb in zip(scalar.segments, res.scalar_mimo.segments):
+        assert sa.order == sb.order
+        assert sa.tags == sb.tags
+        np.testing.assert_allclose(sa.cost, sb.cost)
+        np.testing.assert_allclose(sa.sel, sb.sel)
+    # accepted structural moves match move for move
+    assert res.trace == trace_scalar
+    # the population is never worse than the scalar search
+    assert res.cost <= c_scalar + 1e-9
+    assert res.cost == pytest.approx(res.mimo.total_cost(), rel=1e-12)
+    return c_scalar, res
+
+
+# ----------------------------------------------------- oracle (cost) parity
+def test_mimo_cost_batch_matches_total_cost_f64():
+    states = []
+    for seed in range(3):
+        states.append(make_butterfly(4, 6, 0.4, rng=seed))
+    for seed in range(3):
+        m = make_diamond(seed)
+        optimize_mimo(m, "ro3", max_rounds=2)  # post-move structures too
+        states.append(m)
+    for m in states:
+        want = m.total_cost()
+        got = mimo_cost_population([m])[0]
+        assert got == pytest.approx(want, rel=1e-9)
+
+
+def test_mimo_cost_batch_population_in_one_call():
+    mimos = [make_butterfly(4, 5, 0.3, rng=s) for s in range(8)]
+    got = mimo_cost_population(mimos)
+    want = np.array([m.total_cost() for m in mimos])
+    np.testing.assert_allclose(got, want, rtol=1e-9)
+
+
+def test_encoding_shapes_and_pad_lanes():
+    m = make_butterfly(3, 4, 0.3, rng=1)
+    enc = encode_mimo(m, T=6)
+    S = len(m.segments)
+    assert enc["cost"].shape == (S, 6) and enc["pred"].shape == (S, 6, 6)
+    for si, seg in enumerate(m.segments):
+        k = len(seg.cost)
+        # pads: neutral task, dead tag, pinned after every real lane
+        np.testing.assert_allclose(enc["cost"][si, k:], 0.0)
+        np.testing.assert_allclose(enc["sel"][si, k:], 1.0)
+        assert (enc["tags"][si, k:] == -1).all()
+        assert enc["pred"][si, :k, k:].all()
+        assert not enc["pred"][si, k:, :].any()
+        assert sorted(enc["order"][si, :k]) == list(range(k))
+    pop = encode_population([m, m])
+    assert pop["cost"].shape[0] == 2
+
+
+# ------------------------------------------- per-row metadata reorder kernel
+def test_block_move_pass_batch_per_row_metadata():
+    """Each row of the vmapped machine can carry its own flow — the form the
+    MIMO population reorder uses (one row per segment per member)."""
+    import jax.numpy as jnp
+    from jax.experimental import enable_x64
+
+    from repro.optim import block_move_pass_batch, pred_matrix
+
+    flows = [random_flow(8, 0.3, rng=s, sel_range=(0.2, 1.8)) for s in range(4)]
+    cost = np.stack([f.cost for f in flows])
+    sel = np.stack([f.sel for f in flows])
+    pred = np.stack([pred_matrix(f) for f in flows])
+    seeds = [ro2(f)[0] for f in flows]
+    with enable_x64():
+        refined, costs = block_move_pass_batch(
+            jnp.asarray(cost, dtype=jnp.float64),
+            jnp.asarray(sel, dtype=jnp.float64),
+            jnp.asarray(pred),
+            jnp.asarray(np.array(seeds, dtype=np.int32)),
+            k=5,
+        )
+    refined = np.asarray(refined)
+    for f, seed, row, c in zip(flows, seeds, refined, np.asarray(costs)):
+        want_order, want_cost = block_move_pass(f, list(seed), k=5)
+        assert [int(v) for v in row] == want_order
+        assert c == pytest.approx(want_cost, rel=1e-12)
+
+
+def test_block_move_pass_batch_per_row_rejects_kernel_backend():
+    import jax.numpy as jnp
+
+    from repro.optim import block_move_pass_batch
+
+    with pytest.raises(ValueError, match="shared"):
+        block_move_pass_batch(
+            jnp.ones((2, 4)),
+            jnp.ones((2, 4)),
+            jnp.zeros((2, 4, 4), dtype=bool),
+            jnp.tile(jnp.arange(4, dtype=jnp.int32), (2, 1)),
+            kernel=True,
+        )
+
+
+# --------------------------------------------------- differential: butterfly
+@pytest.mark.parametrize("seed", range(4))
+def test_differential_butterfly_seeded(seed):
+    """Acceptance: batched == scalar optimize_mimo on seeded benchmark
+    butterflies (f64 parity <= 1e-9) and never worse."""
+    m = make_butterfly(4, 6, 0.4, rng=seed)
+    c_scalar, res = assert_differential(m, seed=seed)
+    # butterflies are tree-shaped: scalar structural moves are cost-neutral
+    # at fixed orders, so the scalar trace must be empty (see core.mimo)
+    assert res.trace == []
+    assert np.isfinite(c_scalar)
+
+
+def test_differential_benchmark_butterfly_sizes():
+    """The fig11 benchmark shapes (10 segments of 10 tasks) stay pinned."""
+    m = make_butterfly(6, 8, 0.4, rng=11)
+    assert_differential(m, seed=1, population=4)
+
+
+# ----------------------------------------------------- differential: diamond
+@pytest.mark.parametrize("seed", range(4))
+def test_differential_diamond_accepted_moves(seed):
+    """Diamond segment DAGs make factorize/distribute deltas non-zero: the
+    scalar search accepts moves and the batched member-0 lane must replay
+    the exact accepted sequence."""
+    m = make_diamond(seed)
+    c_scalar, res = assert_differential(m, seed=seed)
+    assert len(res.trace) > 0  # structural moves actually fired
+
+
+def test_batched_explores_beyond_scalar_on_diamond():
+    m = make_diamond(0)
+    res = batched_optimize_mimo(copy.deepcopy(m), population=8, seed=0)
+    assert res.cost < res.scalar_cost - 1e-6  # exploration finds better
+
+
+# ------------------------------------------------------ hypothesis sweep
+if HAVE_HYPOTHESIS:
+
+    @given(
+        n_seg=st.integers(2, 4),
+        seg_size=st.integers(2, 5),
+        pc=st.floats(0.0, 0.5),
+        seed=st.integers(0, 10_000),
+    )
+    @settings(max_examples=8, deadline=None)
+    def test_differential_hypothesis_butterflies(n_seg, seg_size, pc, seed):
+        m = make_butterfly(n_seg, seg_size, pc, rng=seed)
+        assert_differential(m, seed=seed % 17, population=3)
+
+
+# ------------------------------------------------------ structural invariants
+def test_invariants_volumes_dag_monotone():
+    for builder, seed in ((make_butterfly, 2), (make_diamond, 1)):
+        m = builder(seed) if builder is make_diamond else make_butterfly(rng=seed)
+        before_vol = sink_output_volume(m)
+        res = batched_optimize_mimo(copy.deepcopy(m), population=6, seed=seed)
+        for state in (res.mimo, res.scalar_mimo):
+            # seg_parents stays a DAG covering every segment
+            assert sorted(_seg_topo_order(state)) == list(
+                range(len(state.segments))
+            )
+            # no task provenance is lost or invented
+            assert {t for s in state.segments for t in s.tags} == {
+                t for s in m.segments for t in s.tags
+            }
+        if builder is not make_diamond:
+            # tree DAG: §5 moves conserve the sink output volume exactly
+            assert sink_output_volume(res.mimo) == pytest.approx(
+                before_vol, rel=1e-9
+            )
+            assert sink_output_volume(res.scalar_mimo) == pytest.approx(
+                before_vol, rel=1e-9
+            )
+
+
+def test_total_cost_monotone_per_round():
+    """Every accepted optimization round is non-increasing in total cost."""
+    for builder in (lambda: make_butterfly(rng=5), lambda: make_diamond(3)):
+        m = builder()
+        prev = m.total_cost()
+        for _ in range(6):
+            optimize_mimo(m, "ro3", max_rounds=1)
+            cur = m.total_cost()
+            assert cur <= prev + 1e-9
+            prev = cur
+
+
+# ------------------------------------------- core.mimo unit backfill: moves
+def _two_parent_join(tail_tags=(7, 7), tail_cost=(2.0, 2.0), head_sel=0.5):
+    segs = [
+        Segment(
+            np.array([1.0, tail_cost[0]]),
+            np.array([0.8, 0.9]),
+            ((0, 1),),
+            [1, tail_tags[0]],
+        ),
+        Segment(
+            np.array([1.5, tail_cost[1]]),
+            np.array([0.7, 0.9]),
+            ((0, 1),),
+            [2, tail_tags[1]],
+        ),
+        Segment(np.array([3.0, 1.0]), np.array([head_sel, 1.0]), (), [5, 6]),
+    ]
+    return MIMOFlow(segs, [(0, 2), (1, 2)])
+
+
+def test_move_legality_multi_parent_required():
+    m = _two_parent_join()
+    chain = MIMOFlow(m.segments[:2] + m.segments[2:], [(0, 2)])  # 1 parent
+    assert move_candidate(chain, "distribute", 2) is None
+    assert move_candidate(chain, "factorize", 2) is None
+    assert move_candidate(m, "distribute", 2) is not None
+    assert move_candidate(m, "factorize", 2) is not None
+
+
+def test_move_legality_empty_segment():
+    m = _two_parent_join()
+    m.segments[2] = Segment(np.array([]), np.array([]), (), [])
+    assert move_candidate(m, "distribute", 2) is None  # nothing to distribute
+    m2 = _two_parent_join()
+    m2.segments[0] = Segment(np.array([]), np.array([]), (), [])
+    assert move_candidate(m2, "factorize", 2) is None  # empty parent tail
+
+
+def test_move_legality_tagged_tail_mismatch():
+    assert move_candidate(_two_parent_join(tail_tags=(7, 8)), "factorize", 2) is None
+    # same tag but inconsistent records must be rejected too
+    assert (
+        move_candidate(
+            _two_parent_join(tail_cost=(2.0, 4.0)), "factorize", 2
+        )
+        is None
+    )
+
+
+def test_move_legality_distribute_head_guards():
+    assert move_candidate(_two_parent_join(head_sel=1.2), "distribute", 2) is None
+    m = _two_parent_join()
+    # default identity order: the head task now has a within-segment pred
+    m.segments[2].edges = ((1, 0),)
+    assert move_candidate(m, "distribute", 2) is None
+    m2 = _two_parent_join()
+    assert move_candidate(m2, "distribute", 2).rec.tag == 5
+
+
+def test_move_candidate_rejects_unknown_kind():
+    with pytest.raises(ValueError, match="unknown move kind"):
+        move_candidate(_two_parent_join(), "transpose", 2)
+
+
+def test_pop_push_tag_provenance_roundtrip():
+    """A factorized task keeps its provenance tag through a subsequent
+    distribute, and the round trip restores the original flow cost."""
+    m = _two_parent_join()  # parents end with identical tag-7 tasks
+    before = m.total_cost()
+    tags_before = [list(s.tags) for s in m.segments]
+    cand = move_candidate(m, "factorize", 2)
+    assert cand is not None and cand.rec.tag == 7
+    apply_move(m, cand)
+    # the factorized task now heads the join, carrying its tag
+    join = m.segments[2]
+    assert join.tags[join.order[0]] == 7
+    back = move_candidate(m, "distribute", 2)
+    assert back is not None and back.rec.tag == 7  # provenance survived
+    apply_move(m, back)
+    assert m.total_cost() == pytest.approx(before, rel=1e-12)
+    assert [list(s.tags) for s in m.segments] == tags_before
+
+
+def test_pop_task_remaps_edges_and_order():
+    seg = Segment(
+        np.array([1.0, 2.0, 3.0]),
+        np.array([0.5, 0.6, 0.7]),
+        ((0, 1), (1, 2)),
+        [10, 11, 12],
+        [0, 1, 2],
+    )
+    rec = _pop_task(seg, 1)
+    assert rec == TaskRec(2.0, 0.6, 11)
+    assert seg.tags == [10, 12] and seg.order == [0, 1]
+    assert seg.edges == ()  # both edges touched the popped task
+    _push_front(seg, rec)
+    assert seg.order[0] == 2 and seg.tags[2] == 11
+    assert all(a == 2 for a, _ in seg.edges[-2:])  # pinned before everything
+    rec2 = _pop_task(seg, 2)
+    _append_back(seg, rec2, pin=False)
+    assert seg.order[-1] == 2 and seg.edges == ()  # unpinned: free to migrate
+
+
+# ------------------------------------------- core.mimo unit backfill: shapes
+@pytest.mark.parametrize("n_seg", [2, 3, 4, 5, 6])
+def test_butterfly_generator_shape_properties(n_seg):
+    segs = butterfly_mimo_segments(n_seg, 3, 0.2, rng=n_seg)
+    m = butterfly(segs)
+    # a pair-merge reduction tree over n leaves has n - 1 merge segments
+    assert len(m.segments) == 2 * n_seg - 1
+    par = m.seg_parents()
+    sources = [i for i, p in enumerate(par) if not p]
+    joins = [i for i, p in enumerate(par) if len(p) >= 2]
+    assert sources == list(range(n_seg))  # the input segments, in order
+    assert len(joins) == n_seg - 1
+    assert all(len(par[j]) == 2 for j in joins)  # strictly pair-wise merges
+    has_child = {a for a, _ in m.seg_edges}
+    sinks = [i for i in range(len(m.segments)) if i not in has_child]
+    assert len(sinks) == 1  # single reduction root
+    # merge segments are the unit task; tags are globally unique
+    for j in joins:
+        assert len(m.segments[j].cost) == 1
+        np.testing.assert_allclose(m.segments[j].cost, 1.0)
+        np.testing.assert_allclose(m.segments[j].sel, 1.0)
+    tags = [t for s in m.segments for t in s.tags]
+    assert len(tags) == len(set(tags))
+
+
+# ------------------------------------------------- flatten / registry / pipe
+def test_flatten_roundtrip_and_guard():
+    m = make_butterfly(4, 5, 0.3, rng=3)
+    f = mimo_to_flow(m)
+    assert is_mimo_flow(f)
+    assert flow_tags(f) == [t for s in m.segments for t in s.tags]
+    m2 = flow_to_mimo(f)
+    assert m2.total_cost() == pytest.approx(m.total_cost(), rel=1e-12)
+    assert sorted(m2.seg_edges) == sorted(m.seg_edges)
+    for sa, sb in zip(m.segments, m2.segments):
+        assert sa.tags == sb.tags
+        assert sa.flow().pred_mask == sb.flow().pred_mask
+    # plain flows carry no annotations and are rejected by the guard
+    assert not is_mimo_flow(case_study_flow())
+    assert not is_mimo_flow(random_flow(10, 0.3, rng=0))
+    with pytest.raises(ValueError, match="annotation"):
+        flow_to_mimo(case_study_flow())
+
+
+def test_registry_entry_gating_and_result():
+    opt = optim.get_optimizer("batched-mimo")
+    assert optim.BATCHABLE in opt.tags and optim.APPROXIMATE in opt.tags
+    assert not opt.supports(case_study_flow())
+    assert not opt.supports(random_flow(12, 0.3, rng=1))
+    f = mimo_to_flow(make_butterfly(4, 5, 0.4, rng=9))
+    assert opt.supports(f)
+    order, cost = batched_mimo(f, population=4, seed=0)
+    assert f.is_valid_order(order)
+    scalar = optimize_mimo(flow_to_mimo(f), "ro3")
+    assert cost <= scalar + 1e-9  # acceptance: never worse than scalar
+    assert np.isfinite(scm(f, order))  # linear re-score works for consumers
+
+
+def test_adaptive_pipeline_accepts_batched_mimo():
+    """The pipeline guard keeps un-annotated live flows on their plan."""
+    from repro.pipeline.adaptive import AdaptivePipeline
+    from repro.pipeline.case_study import (
+        case_study_extra_edges,
+        case_study_ops,
+        make_tweets,
+    )
+
+    ap = AdaptivePipeline(
+        case_study_ops(),
+        optimizer="batched-mimo",
+        reoptimize_every=1,
+        extra_edges=case_study_extra_edges(),
+    )
+    plan0 = list(ap.plan)
+    ap.run(make_tweets(2_000, seed=0))
+    assert ap.plan == plan0  # supports() is False: no re-optimization churn
+    assert ap.stats.to_flow().is_valid_order(ap.plan)
+
+
+def test_seg_parent_matrix_matches_seg_parents():
+    m = make_diamond(2)
+    par = seg_parent_matrix(m)
+    want = m.seg_parents()
+    for d in range(len(m.segments)):
+        assert sorted(np.nonzero(par[d])[0]) == sorted(want[d])
+
+
+def test_batched_optimize_does_not_mutate_input():
+    m = make_butterfly(3, 4, 0.3, rng=4)
+    snapshot = copy.deepcopy(m)
+    batched_optimize_mimo(m, population=4, seed=0)
+    assert m.total_cost() == pytest.approx(snapshot.total_cost(), rel=1e-12)
+    for sa, sb in zip(m.segments, snapshot.segments):
+        assert sa.order == sb.order and sa.tags == sb.tags

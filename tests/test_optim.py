@@ -28,7 +28,7 @@ CORE_NAMES = (
     "swap", "greedy1", "greedy2", "partition",
     "kbz", "ro1", "ro2", "ro3",
     "batched-ro3", "kernel-ro3", "portfolio",
-    "batched-pgreedy", "parallel-portfolio",
+    "batched-pgreedy", "parallel-portfolio", "batched-mimo",
 )
 
 
@@ -43,6 +43,7 @@ def test_registry_contents_and_tags():
         "portfolio",
         "batched-pgreedy",
         "parallel-portfolio",
+        "batched-mimo",
     }
     assert "dp" not in optim.list_optimizers(exclude=(optim.EXHAUSTIVE,))
     for name in names:

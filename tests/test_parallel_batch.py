@@ -179,6 +179,7 @@ def test_parallel_registry_entries_and_tags():
         "portfolio",
         "batched-pgreedy",
         "parallel-portfolio",
+        "batched-mimo",
     }
     for name in ("batched-pgreedy", "parallel-portfolio"):
         opt = optim.get_optimizer(name)
