@@ -28,9 +28,10 @@ BENCHES = [
     "fig12",       # exact-algorithm time overhead
     "pipeline",    # executable SCM-vs-wall-clock validation
     "kernels",     # kernel-level SCM validation
+    "service",     # flow-optimization service: cache + batched dispatch
 ]
 
-QUICK_BENCHES = ["optimizers", "case_study"]  # CI smoke subset
+QUICK_BENCHES = ["optimizers", "case_study", "service"]  # CI smoke subset
 
 
 def main(argv=None) -> int:

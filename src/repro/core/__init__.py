@@ -4,7 +4,12 @@
 from .cost import PrefixState, scm, scm_parallel, swap_delta
 from .exact import backtracking, dp, topsort
 from .flow import Flow, ParallelPlan
-from .generators import butterfly_mimo_segments, case_study_flow, random_flow
+from .generators import (
+    butterfly_mimo_segments,
+    case_study_flow,
+    random_flow,
+    workload_mixture,
+)
 from .heuristics import greedy1, greedy2, partition, random_plan, swap
 from .mimo import (
     MIMOFlow,
@@ -27,4 +32,5 @@ __all__ = [
     "MIMOFlow", "Segment", "butterfly", "optimize_mimo",
     "mimo_to_flow", "flow_to_mimo", "is_mimo_flow",
     "random_flow", "case_study_flow", "butterfly_mimo_segments",
+    "workload_mixture",
 ]

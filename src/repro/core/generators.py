@@ -8,7 +8,12 @@ import numpy as np
 
 from .flow import Flow
 
-__all__ = ["random_flow", "case_study_flow", "butterfly_mimo_segments"]
+__all__ = [
+    "random_flow",
+    "case_study_flow",
+    "butterfly_mimo_segments",
+    "workload_mixture",
+]
 
 
 def random_flow(
@@ -114,6 +119,84 @@ def case_study_flow() -> Flow:
     ]
     edges = [(0, k) for k in range(1, 13)] + [(k, 12) for k in range(12)] + inner
     return Flow(cost=cost, sel=sel, edges=tuple(edges), names=names)
+
+
+def workload_mixture(
+    seed: int,
+    n_requests: int = 256,
+    dup_fraction: float = 0.2,
+    iso_fraction: float = 0.15,
+    kinds: tuple[str, ...] = ("linear", "pc", "mimo", "parallel"),
+    size_range: tuple[int, int] = (8, 20),
+    pc_range: tuple[float, float] = (0.2, 0.6),
+    cost_range: tuple[float, float] = (1.0, 100.0),
+    sel_range: tuple[float, float] = (0.05, 2.0),
+) -> list[Flow]:
+    """A seeded stream of optimization requests for the flow service.
+
+    Cycles through flow kinds — ``linear`` (unconstrained), ``pc``
+    (precedence-constrained DAGs), ``mimo`` (flattened §5 butterflies with
+    segment annotations) and ``parallel`` (sel > 1 heavy tails, the §6
+    fan-out beneficiaries) — then mixes in ``dup_fraction`` exact
+    duplicates and ``iso_fraction`` isomorphic repeats (random task
+    relabelings) of earlier flows, shuffled into arrival order.  Shared by
+    ``benchmarks/bench_service.py``, ``launch/dryrun.py --service`` and
+    the service tests; fully deterministic in ``seed``.
+    """
+    if n_requests <= 0:
+        return []
+    rng = np.random.default_rng(seed)
+    pyrng = random.Random(seed)
+    n_dup = int(round(dup_fraction * n_requests))
+    n_iso = int(round(iso_fraction * n_requests))
+    n_base = max(1, n_requests - n_dup - n_iso)
+    lo, hi = size_range
+    base: list[Flow] = []
+    for i in range(n_base):
+        kind = kinds[i % len(kinds)]
+        n = int(rng.integers(lo, hi + 1))
+        pc = float(rng.uniform(*pc_range))
+        if kind == "linear":
+            base.append(
+                random_flow(n, 0.0, rng=rng, cost_range=cost_range,
+                            sel_range=sel_range)
+            )
+        elif kind == "pc":
+            base.append(
+                random_flow(n, pc, rng=rng, cost_range=cost_range,
+                            sel_range=sel_range)
+            )
+        elif kind == "mimo":
+            from .mimo import butterfly, mimo_to_flow
+
+            seg = max(2, n // 3)
+            base.append(
+                mimo_to_flow(
+                    butterfly(
+                        butterfly_mimo_segments(
+                            3, seg, pc, rng=rng, cost_range=cost_range,
+                            sel_range=sel_range,
+                        )
+                    )
+                )
+            )
+        elif kind == "parallel":
+            base.append(
+                random_flow(n, pc, rng=rng, cost_range=cost_range,
+                            sel_range=(1.0, max(1.5, sel_range[1])))
+            )
+        else:
+            raise ValueError(f"unknown workload kind {kind!r}")
+    requests = list(base)
+    for _ in range(n_dup):
+        requests.append(base[pyrng.randrange(len(base))])
+    for _ in range(n_iso):
+        f = base[pyrng.randrange(len(base))]
+        perm = list(range(f.n))
+        pyrng.shuffle(perm)
+        requests.append(f.relabel(perm)[0])
+    pyrng.shuffle(requests)
+    return requests[:n_requests]
 
 
 def butterfly_mimo_segments(

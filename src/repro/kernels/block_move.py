@@ -21,6 +21,13 @@ one kernel step computes.  The kernel therefore replicates the scalar (and
 vmapped) policy move for move, in one device step per accepted move (plus
 one per sweep fixpoint check) instead of one per probe.
 
+Metadata forms: ``cost``/``sel``/``pred`` may be shared across the
+population (``(n,)`` / ``(n, n)``) or *per-row* (``(B, n)`` / ``(B, n, n)``),
+where every row is a different sub-flow — the form ``optim.mimo_batch``
+uses to refine all segments of a MIMO population, and the flow-optimization
+service's batcher uses to fuse unrelated client flows into one sweep.  The
+kernel body is shared: per-row blocks are simply indexed by grid program.
+
 TPU notes: every per-step op is a matmul, an elementwise broadcast or a
 cumulative reduce — no dynamic gathers.  Task-metadata lookups ``cost[o]``
 and the permuted precedence matrix ``pred[o_i, o_j]`` go through the
@@ -60,9 +67,12 @@ def _kernel(
     *, k: int, max_rounds: int, n: int,
 ):
     dtype = cost_ref.dtype
-    cv = cost_ref[...]  # (1, n)
+    cv = cost_ref[...]  # (1, n) — this row's costs (shared or per-row form)
     sv = sel_ref[...]  # (1, n)
-    pv = pred_ref[...]  # (n, n)  0/1 in dtype: [i, j] iff i must precede j
+    # (n, n) 0/1 in dtype: [i, j] iff i must precede j.  The per-row
+    # metadata form hands each grid program a (1, n, n) block; the reshape
+    # is a no-op squeeze of the leading block dim (shared form: identity).
+    pv = jnp.reshape(pred_ref[...], (n, n))
     inf = jnp.asarray(jnp.inf, dtype)
     eps = jnp.asarray(_IMPROVE_EPS, dtype)
     BIG = jnp.int32(k * n + 1)  # > any scan index (b-1)*n + s
@@ -191,6 +201,14 @@ def block_move_sweep_kernel(
 ) -> tuple[jax.Array, jax.Array]:
     """Refine every row of ``orders`` to the RO-III block-move fixpoint.
 
+    ``cost``/``sel`` may be shared ``(n,)`` metadata for the whole
+    population (with ``pred`` ``(n, n)``) or the per-row form ``(B, n)``
+    (with ``pred`` ``(B, n, n)``) where every row is a different sub-flow —
+    the encoding ``optim.mimo_batch`` and the flow-optimization service's
+    cross-request batcher use for heterogeneous lanes.  Per-row blocks are
+    routed to each grid program through the BlockSpec index maps; the kernel
+    body is identical in both forms.
+
     Returns ``(refined (B, n) int32, steps (B,) int32)`` where ``steps``
     counts while-loop iterations per row (accepted moves + sweep fixpoint
     checks) — the per-row device-pass metric ``bench_kernels`` compares
@@ -199,16 +217,37 @@ def block_move_sweep_kernel(
     B, n = orders.shape
     keff = _effective_k(k, n)
     dtype = cost.dtype
+    per_row = cost.ndim == 2
+    if per_row and (
+        cost.shape != (B, n) or sel.shape != (B, n) or pred.shape != (B, n, n)
+    ):
+        raise ValueError(
+            f"per-row metadata must be cost/sel (B, n) and pred (B, n, n); "
+            f"got {cost.shape}/{sel.shape}/{pred.shape} for orders {orders.shape}"
+        )
     kernel = functools.partial(_kernel, k=keff, max_rounds=max_rounds, n=n)
-    refined, steps = pl.pallas_call(
-        kernel,
-        grid=(B,),
-        in_specs=[
+    if per_row:
+        meta_specs = [
+            pl.BlockSpec((1, n), lambda i: (i, 0)),
+            pl.BlockSpec((1, n), lambda i: (i, 0)),
+            pl.BlockSpec((1, n, n), lambda i: (i, 0, 0)),
+        ]
+        meta_args = (cost, sel, pred.astype(dtype))
+    else:
+        meta_specs = [
             pl.BlockSpec((1, n), lambda i: (0, 0)),
             pl.BlockSpec((1, n), lambda i: (0, 0)),
             pl.BlockSpec((n, n), lambda i: (0, 0)),
-            pl.BlockSpec((1, n), lambda i: (i, 0)),
-        ],
+        ]
+        meta_args = (
+            jnp.reshape(cost, (1, n)),
+            jnp.reshape(sel, (1, n)),
+            pred.astype(dtype),
+        )
+    refined, steps = pl.pallas_call(
+        kernel,
+        grid=(B,),
+        in_specs=meta_specs + [pl.BlockSpec((1, n), lambda i: (i, 0))],
         out_specs=[
             pl.BlockSpec((1, n), lambda i: (i, 0)),
             pl.BlockSpec((1, 1), lambda i: (i, 0)),
@@ -218,10 +257,5 @@ def block_move_sweep_kernel(
             jax.ShapeDtypeStruct((B, 1), jnp.int32),
         ],
         interpret=interpret,
-    )(
-        jnp.reshape(cost, (1, n)),
-        jnp.reshape(sel, (1, n)),
-        pred.astype(dtype),
-        orders.astype(jnp.int32),
-    )
+    )(*meta_args, orders.astype(jnp.int32))
     return refined, steps[:, 0]

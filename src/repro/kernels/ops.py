@@ -43,6 +43,8 @@ def block_move_sweep(
     """RO-III block-move refinement of a plan population (B, n) via the
     fused Pallas sweep kernel: Mosaic-compiled on a TPU backend, Pallas
     interpreter elsewhere (same program, so CPU CI validates the TPU path).
+    ``cost``/``sel``/``pred`` may be shared ((n,)/(n, n)) or per-row
+    ((B, n)/(B, n, n)) metadata — see ``block_move_sweep_kernel``.
 
     Returns ``(refined orders (B, n) int32, per-row device steps (B,))``.
     """

@@ -172,21 +172,29 @@ def _block_move_ref_row(cost, sel, pred, order, *, k: int, max_rounds: int):
 
 @functools.partial(jax.jit, static_argnames=("k", "max_rounds"))
 def block_move_pass_ref(
-    cost: jax.Array,  # (n,) task costs
-    sel: jax.Array,  # (n,) task selectivities
-    pred: jax.Array,  # (n, n) bool, [j, v]: j must precede v (closure)
+    cost: jax.Array,  # (n,) shared or (B, n) per-row task costs
+    sel: jax.Array,  # (n,) shared or (B, n) per-row selectivities
+    pred: jax.Array,  # (n, n) or (B, n, n) bool, [j, v]: j must precede v
     orders: jax.Array,  # (B, n) int32 population of valid plans
     k: int = 5,
     max_rounds: int = 50,
 ) -> tuple[jax.Array, jax.Array]:
     """Reference RO-III block-move refinement of a plan population.
 
-    Returns ``(refined (B, n) int32, steps (B,) int32)``; ``steps`` counts
-    accepted moves + sweep fixpoint checks per row, matching the kernel's
-    device-pass metric.
+    Accepts the same shared / per-row metadata forms as the Pallas kernel
+    (per-row: every row is its own sub-flow).  Returns ``(refined (B, n)
+    int32, steps (B,) int32)``; ``steps`` counts accepted moves + sweep
+    fixpoint checks per row, matching the kernel's device-pass metric.
     """
     n = orders.shape[1]
     keff = max(1, min(k, n - 1))  # sizes > n-1 have no feasible target
+    if cost.ndim == 2:
+        row = functools.partial(
+            _block_move_ref_row, k=keff, max_rounds=max_rounds
+        )
+        return jax.vmap(row)(
+            cost, sel, pred.astype(bool), orders.astype(jnp.int32)
+        )
     row = functools.partial(
         _block_move_ref_row, cost, sel, pred.astype(bool),
         k=keff, max_rounds=max_rounds,

@@ -133,8 +133,105 @@ def optimizer_dryrun() -> int:
     return 1 if failures else 0
 
 
+def service_dryrun() -> int:
+    """Exercise the flow-optimization service on a seeded request stream.
+
+    Serves a ``workload_mixture`` through ``FlowOptimizationService`` and
+    gates on the serving contract: every answer must equal fresh
+    single-flow dispatch of the same optimizer (<= 1e-9 in f64), repeats
+    must be amortized (>= 5x fewer device passes than one-at-a-time), and
+    the drift hook must invalidate + re-optimize on a stat-bucket move.
+
+    Defined (and dispatched from ``__main__``) before the XLA_FLAGS
+    mutation below, like ``optimizer_dryrun``: the service wants the real
+    single-device backend.
+    """
+    import numpy as np
+
+    from ..core.generators import workload_mixture
+    from ..pipeline.ops import PipelineOp
+    from ..pipeline.stats import FlowStats
+    from ..service import FlowOptimizationService
+
+    failures = 0
+    opts = {"population": 12, "seed": 0}
+    flows = workload_mixture(0, n_requests=48, size_range=(6, 12))
+    svc = FlowOptimizationService()
+    served = svc.serve(flows, optimizer="batched-ro3", **opts)
+    ref = FlowOptimizationService()
+    delta = max(
+        abs(svc_r.scm - ref.dispatch_one(f, "batched-ro3", **opts).scm)
+        for f, svc_r in zip(flows, served)
+    )
+    s = svc.stats()
+    print(
+        f"[{'ok' if delta <= 1e-9 else 'FAIL'}]   service "
+        f"requests={s['requests']} hit_rate={s['amortized_hit_rate']:.2f} "
+        f"device_passes={s['device_passes']} "
+        f"passes_per_request={s['passes_per_request']:.3f} "
+        f"parity_max_delta={delta:.2e}",
+        flush=True,
+    )
+    if delta > 1e-9:
+        failures += 1
+    if svc.device_passes * 5 > len(flows):
+        failures += 1
+        print(
+            f"[FAIL] service: {svc.device_passes} device passes for "
+            f"{len(flows)} requests (< 5x amortization)",
+            file=sys.stderr,
+        )
+    # fused Pallas backend on heterogeneous per-row lanes
+    ksvc = FlowOptimizationService()
+    kserved = ksvc.serve(flows[:8], optimizer="kernel-ro3",
+                         population=8, seed=0)
+    kref = FlowOptimizationService()
+    kdelta = max(
+        abs(r.scm - kref.dispatch_one(f, "kernel-ro3",
+                                      population=8, seed=0).scm)
+        for f, r in zip(flows, kserved)
+    )
+    print(
+        f"[{'ok' if kdelta <= 1e-9 else 'FAIL'}]   service-kernel "
+        f"requests=8 parity_max_delta={kdelta:.2e}",
+        flush=True,
+    )
+    if kdelta > 1e-9:
+        failures += 1
+    # drift loop: a stat-bucket move must invalidate and re-optimize
+    def _op(i):
+        return PipelineOp(
+            f"op{i}", lambda f: ({}, None), {"x"}, {f"y{i}"},
+            est_cost=float(1 + i), est_sel=0.5,
+        )
+
+    stats = FlowStats([_op(i) for i in range(8)])
+    dsvc = FlowOptimizationService()
+    dsvc.watch("pipe", stats, optimizer="batched-ro3", **opts)
+    dsvc.poll_drift()
+    stats.cost[0] *= 50.0
+    events = dsvc.poll_drift()
+    plan = dsvc.watched_plan("pipe")
+    drift_ok = (
+        len(events) == 1
+        and events[0].invalidated >= 1
+        and plan is not None
+        and stats.to_flow().is_valid_order(list(plan.order))
+        and bool(np.isfinite(plan.scm))
+    )
+    print(f"[{'ok' if drift_ok else 'FAIL'}]   service-drift "
+          f"events={len(events)} invalidated="
+          f"{events[0].invalidated if events else 0}", flush=True)
+    if not drift_ok:
+        failures += 1
+    return 1 if failures else 0
+
+
 if __name__ == "__main__" and "--optimizers" in sys.argv:
     raise SystemExit(optimizer_dryrun())
+
+if __name__ == "__main__" and "--service" in sys.argv:
+    raise SystemExit(service_dryrun())
 
 os.environ["XLA_FLAGS"] = (
     "--xla_force_host_platform_device_count=512 "
@@ -482,6 +579,9 @@ def main(argv=None):
     ap.add_argument("--optimizers", action="store_true",
                     help="dry-run the repro.optim registry instead of "
                          "compiling model cells")
+    ap.add_argument("--service", action="store_true",
+                    help="dry-run the flow-optimization service (cache + "
+                         "batched dispatch + drift loop)")
     ap.add_argument("--out", default=None)
     args = ap.parse_args(argv)
     if args.optimizers:
@@ -489,6 +589,8 @@ def main(argv=None):
         # mutation; this branch is a fallback for programmatic main() calls
         # (correct, merely slower under the 512-device host backend).
         return optimizer_dryrun()
+    if args.service:
+        return service_dryrun()
 
     cells: list[tuple[str, str]] = []
     archs = list_archs() if (args.all or not args.arch) else [args.arch]

@@ -48,6 +48,7 @@ __all__ = [
     "block_move_pass_batch",
     "pred_matrix",
     "hill_climb",
+    "seed_population",
     "population_hill_climb",
     "kernel_population_hill_climb",
     "portfolio_search",
@@ -246,21 +247,19 @@ def block_move_pass_batch(
 
     ``cost``/``sel`` may be (n,) shared across rows or (B, n) per-row (with
     ``pred`` (B, n, n)) — the per-row form is what ``optim.mimo_batch`` uses
-    to refine every segment of a MIMO population in one call, each row being
-    a different sub-flow.  ``kernel=True`` dispatches to the fused Pallas
-    sweep (``kernels.ops.block_move_sweep``) instead of the vmapped state
-    machine — identical move policy and fixpoints, far fewer sequential
-    device steps (shared-metadata form only).  ``return_steps=True`` appends
+    to refine every segment of a MIMO population in one call, and what the
+    flow-optimization service's batcher uses to fuse unrelated client flows
+    into one sweep, each row being a different sub-flow.  ``kernel=True``
+    dispatches to the fused Pallas sweep (``kernels.ops.block_move_sweep``)
+    instead of the vmapped state machine — identical move policy and
+    fixpoints, far fewer sequential device steps, in either metadata form.
+    ``return_steps=True`` appends
     the per-row while-loop iteration count (probes for the vmapped machine,
     accepted moves + sweep checks for the kernel) — the device-pass metric
     ``bench_kernels`` compares.
     """
     per_row = cost.ndim == 2
     if kernel:
-        if per_row:
-            raise ValueError(
-                "kernel=True requires shared (n,) cost/sel metadata"
-            )
         from ..kernels.ops import block_move_sweep
 
         refined, steps = block_move_sweep(
@@ -331,6 +330,22 @@ def hill_climb(
     return out, c
 
 
+def seed_population(flow: Flow, population: int, seed: int) -> list:
+    """The hill-climb family's seeding: row 0 = RO-II, then seeded random
+    valid plans.  Shared by :func:`population_hill_climb` and the
+    flow-optimization service's bucket batcher — the service's "bucket
+    answers are bit-equal to single-flow dispatch" guarantee depends on
+    both paths building identical rows."""
+    from ..core.heuristics import random_plan
+    from ..core.rank import ro2
+
+    rng = random.Random(seed)
+    rows: list[list[int]] = [ro2(flow)[0]]
+    while len(rows) < population:
+        rows.append(random_plan(flow, rng))
+    return rows
+
+
 def population_hill_climb(
     flow: Flow,
     k: int = 5,
@@ -347,13 +362,7 @@ def population_hill_climb(
     optimum at no extra wall-clock on an accelerator.  ``kernel=True`` routes
     the refinement through the fused Pallas sweep.
     """
-    from ..core.heuristics import random_plan
-    from ..core.rank import ro2
-
-    rng = random.Random(seed)
-    rows: list[list[int]] = [ro2(flow)[0]]
-    while len(rows) < population:
-        rows.append(random_plan(flow, rng))
+    rows = seed_population(flow, population, seed)
     refined, costs = hill_climb(
         flow, np.asarray(rows), k=k, max_rounds=max_rounds, kernel=kernel
     )

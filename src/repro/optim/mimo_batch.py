@@ -250,14 +250,16 @@ def mimo_cost_population(
 
 
 def segment_reorder_population(
-    enc: dict[str, np.ndarray], k: int = 5, max_rounds: int = 50
+    enc: dict[str, np.ndarray], k: int = 5, max_rounds: int = 50,
+    kernel: bool = False,
 ) -> np.ndarray:
     """Refine every segment of every member in one device call.
 
     Flattens the (B, S, T) encoding into B*S rows of the per-row-metadata
-    ``block_move_pass_batch`` (the vmapped RO-III machine); rows seeded with
-    a segment's RO-II order come back as scalar ``ro3``'s order.  Returns
-    refined (B, S, T) lane permutations.
+    ``block_move_pass_batch``; rows seeded with a segment's RO-II order come
+    back as scalar ``ro3``'s order.  ``kernel=True`` runs the fused Pallas
+    sweep backend on the same heterogeneous per-row lanes (identical policy
+    and fixpoints).  Returns refined (B, S, T) lane permutations.
     """
     B, S, T = enc["order"].shape
     with enable_x64():
@@ -268,6 +270,7 @@ def segment_reorder_population(
             jnp.asarray(enc["order"].reshape(B * S, T)),
             k=k,
             max_rounds=max_rounds,
+            kernel=kernel,
         )
         return np.asarray(refined).reshape(B, S, T)
 

@@ -17,6 +17,13 @@ from .ops import PipelineOp, derive_constraints
 
 __all__ = ["FlowStats"]
 
+# Floor for measured per-row cost.  A first sample with zero/near-zero
+# ``seconds`` (timer granularity, empty batch fast-paths) would otherwise
+# *replace* the cost prior with 0, making the task's rank (1 - sel)/c blow
+# up and degenerating every downstream plan until enough EMA samples wash
+# it out.
+_COST_FLOOR = 1e-12
+
 
 class FlowStats:
     def __init__(
@@ -38,7 +45,7 @@ class FlowStats:
     def observe(self, i: int, rows_in: int, rows_out: int, seconds: float) -> None:
         if rows_in <= 0:
             return
-        c = seconds / rows_in
+        c = max(seconds / rows_in, _COST_FLOOR)
         s = max(rows_out / rows_in, 1e-6)
         if self.samples[i] == 0:
             # first real sample replaces the prior scale entirely for cost

@@ -1,0 +1,23 @@
+# Flow-optimization service: cross-request batched plan serving with a
+# fingerprint plan cache and drift-triggered re-optimization.  The paper's
+# optimizer as always-on infrastructure (§1's dynamic environments): see
+# server.FlowOptimizationService for the serving loop, fingerprint for the
+# relabel-invariant cache keys, batcher for the fused bucket dispatch.
+from .batcher import FUSABLE, bucket_n, dispatch_bucket
+from .cache import CacheEntry, PlanCache
+from .fingerprint import Fingerprint, fingerprint, stat_buckets
+from .server import DriftEvent, FlowOptimizationService, OptimizeResult
+
+__all__ = [
+    "FlowOptimizationService",
+    "OptimizeResult",
+    "DriftEvent",
+    "PlanCache",
+    "CacheEntry",
+    "Fingerprint",
+    "fingerprint",
+    "stat_buckets",
+    "FUSABLE",
+    "bucket_n",
+    "dispatch_bucket",
+]

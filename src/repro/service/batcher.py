@@ -1,0 +1,139 @@
+"""Shape-bucketed cross-request dispatch: B client flows, one device sweep.
+
+Cache-miss requests for the population hill-climb family (``batched-ro3``,
+``kernel-ro3``) are fused across *unrelated* flows: each request's
+population rows are built exactly as its single-flow dispatch would build
+them (RO-II seed + seeded random restarts), padded to the bucket's task
+count with neutral tasks (cost 0, sel 1, pinned after every real task —
+the MIMO lane encoding of ``optim.mimo_batch``), and the whole bucket runs
+as ONE per-row-metadata ``block_move_pass_batch`` call (the fused Pallas
+sweep for ``kernel-ro3``).
+
+Pad lanes are provably inert: a pad-only block's move delta is exactly 0
+(never strictly improving), and a real block cannot jump a pad (every real
+task precedes every pad, so the jumped pad fails the precedence rectangle
+test) — hence a padded row refines move-for-move like its unpadded self
+and the device costs come back bit-equal (pinned in
+``tests/test_kernel_block_move.py``).  Combined with per-request seeding
+parity, a bucket dispatch returns *exactly* what B single-flow registry
+dispatches would return, for one device sweep instead of B.
+"""
+from __future__ import annotations
+
+import inspect
+import math
+
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import enable_x64
+
+from ..core.cost import scm
+from ..core.flow import Flow
+from ..optim import api
+from ..optim.batched import (
+    block_move_pass_batch,
+    pred_matrix,
+    seed_population,
+)
+
+__all__ = [
+    "FUSABLE",
+    "bucket_n",
+    "family_opts",
+    "pad_rows",
+    "dispatch_bucket",
+]
+
+# optimizer name -> kernel backend flag for the fused bucket dispatch
+FUSABLE = {"batched-ro3": False, "kernel-ro3": True}
+
+
+def bucket_n(n: int, multiple: int = 4) -> int:
+    """Bucket task count: ``n`` rounded up to a multiple (fewer shapes =>
+    fewer recompiles of the device sweep across heterogeneous requests)."""
+    return int(multiple * math.ceil(max(int(n), 1) / multiple))
+
+
+def family_opts(optimizer: str, opts: dict) -> dict:
+    """The (k, population, seed, max_rounds) a single-flow dispatch of
+    ``optimizer`` would use — request opts merged over the registered
+    function's own defaults, so bucket dispatch replicates
+    ``get_optimizer(optimizer).raw(flow, **opts)`` exactly."""
+    sig = inspect.signature(api.get_optimizer(optimizer).fn)
+    merged = {
+        name: opts.get(name, sig.parameters[name].default)
+        for name in ("k", "population", "seed", "max_rounds")
+    }
+    unknown = set(opts) - set(merged)
+    if unknown:
+        raise ValueError(
+            f"unsupported opts for fused dispatch of {optimizer!r}: "
+            f"{sorted(unknown)}"
+        )
+    return merged
+
+
+def pad_rows(flow: Flow, rows: list, n_b: int):
+    """Pad one request's metadata + plan rows to ``n_b`` neutral lanes.
+
+    Returns ``(cost (n_b,), sel (n_b,), pred (n_b, n_b) bool, orders
+    (P, n_b) int32)`` with pad tasks appended in index order and pinned
+    after every real task.
+    """
+    m = flow.n
+    if m > n_b:
+        raise ValueError(f"flow of size {m} exceeds bucket size {n_b}")
+    c = np.zeros(n_b)
+    c[:m] = flow.cost
+    s = np.ones(n_b)
+    s[:m] = flow.sel
+    p = np.zeros((n_b, n_b), dtype=bool)
+    p[:m, :m] = pred_matrix(flow)
+    p[:m, m:] = True  # pads are pinned after every real task
+    arr = np.empty((len(rows), n_b), dtype=np.int32)
+    arr[:, :m] = np.asarray(rows, dtype=np.int32)
+    arr[:, m:] = np.arange(m, n_b, dtype=np.int32)
+    return c, s, p, arr
+
+
+def dispatch_bucket(
+    flows: list, optimizer: str, opts: dict
+) -> list:
+    """Optimize every flow of one shape bucket in a single device sweep.
+
+    All flows share ``optimizer``/``opts`` (the bucket key includes them).
+    Returns ``[(order, cost), ...]`` per flow, identical in f64 to
+    ``api.get_optimizer(optimizer).raw(flow, **opts)`` flow by flow.
+    """
+    kernel = FUSABLE[optimizer]
+    fo = family_opts(optimizer, opts)
+    P = max(1, int(fo["population"]))
+    n_b = bucket_n(max(f.n for f in flows))
+    cs, ss, ps, os_ = [], [], [], []
+    for f in flows:
+        rows = seed_population(f, P, int(fo["seed"]))
+        c, s, p, arr = pad_rows(f, rows, n_b)
+        cs.append(np.tile(c, (P, 1)))
+        ss.append(np.tile(s, (P, 1)))
+        ps.append(np.tile(p, (P, 1, 1)))
+        os_.append(arr)
+    with enable_x64():
+        refined, costs = block_move_pass_batch(
+            jnp.asarray(np.concatenate(cs), dtype=jnp.float64),
+            jnp.asarray(np.concatenate(ss), dtype=jnp.float64),
+            jnp.asarray(np.concatenate(ps)),
+            jnp.asarray(np.concatenate(os_)),
+            k=int(fo["k"]),
+            max_rounds=int(fo["max_rounds"]),
+            kernel=kernel,
+        )
+        refined = np.asarray(refined)
+        costs = np.asarray(costs)
+    out = []
+    for i, f in enumerate(flows):
+        block = slice(i * P, (i + 1) * P)
+        best = int(np.argmin(costs[block]))
+        order = [int(v) for v in refined[block][best][: f.n]]
+        assert f.is_valid_order(order)
+        out.append((order, scm(f, order)))
+    return out

@@ -1,0 +1,117 @@
+"""Bounded LRU plan cache keyed by flow fingerprints.
+
+Entries live in canonical task space (``service.fingerprint``): a plan
+cached for one flow serves every exact duplicate and every isomorphic
+relabeling, each client translating the canonical order back through its
+own fingerprint permutation.
+
+A fingerprint digest quantizes statistics into buckets, so two flows with
+*near*-identical metadata can share a key.  ``get(..., exact=True)`` (the
+default serving mode) therefore verifies the entry's stored canonical
+metadata bit-for-bit against the requesting flow's canonical form before
+serving — a bucket collision with different exact statistics counts as a
+miss (``stale``) and the entry is refreshed by the subsequent ``put``.
+``exact=False`` serves any same-digest entry (same canonical structure, so
+the plan is always *valid*); callers re-score it on their own metadata —
+the paper's "plan is robust to small stat drift" trade, at the price of
+exact-parity with fresh dispatch.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import OrderedDict
+
+from ..core.flow import Flow
+from .fingerprint import canon_equal
+
+__all__ = ["CacheEntry", "PlanCache"]
+
+
+@dataclasses.dataclass
+class CacheEntry:
+    """A served plan in canonical task space."""
+
+    digest: str
+    optimizer: str
+    opts_key: tuple
+    order: tuple  # canonical-space plan
+    cost: float  # the optimizer's f64 cost on the canonical flow
+    canon: Flow  # exact canonical flow, for hit verification
+    batch_size: int = 1  # size of the fused dispatch that produced the plan
+    hits: int = 0
+
+    def matches(self, canon: Flow) -> bool:
+        """Bit-exact canonical-metadata equality with ``canon``."""
+        return canon_equal(self.canon, canon)
+
+
+class PlanCache:
+    """Bounded LRU: ``(digest, optimizer, opts_key) -> CacheEntry``."""
+
+    def __init__(self, maxsize: int = 512):
+        if maxsize <= 0:
+            raise ValueError("maxsize must be positive")
+        self.maxsize = maxsize
+        self._entries: "OrderedDict[tuple, CacheEntry]" = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+        self.stale = 0  # same-digest entries rejected by the exact check
+
+    @staticmethod
+    def key(digest: str, optimizer: str, opts_key: tuple = ()) -> tuple:
+        return (digest, optimizer, tuple(opts_key))
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def __contains__(self, key: tuple) -> bool:
+        return key in self._entries
+
+    def get(
+        self, key: tuple, canon: Flow | None = None, exact: bool = True
+    ) -> CacheEntry | None:
+        entry = self._entries.get(key)
+        if entry is None:
+            self.misses += 1
+            return None
+        if exact and canon is not None and not entry.matches(canon):
+            self.stale += 1
+            self.misses += 1
+            return None
+        self._entries.move_to_end(key)
+        self.hits += 1
+        entry.hits += 1
+        return entry
+
+    def put(self, key: tuple, entry: CacheEntry) -> None:
+        self._entries[key] = entry
+        self._entries.move_to_end(key)
+        while len(self._entries) > self.maxsize:
+            self._entries.popitem(last=False)
+            self.evictions += 1
+
+    def invalidate(self, digest: str) -> int:
+        """Drop every entry under ``digest`` (any optimizer/opts); returns
+        the number removed.  The drift hook calls this when a watched
+        flow's stat buckets move."""
+        doomed = [k for k in self._entries if k[0] == digest]
+        for k in doomed:
+            del self._entries[k]
+        return len(doomed)
+
+    @property
+    def hit_rate(self) -> float:
+        total = self.hits + self.misses
+        return self.hits / total if total else 0.0
+
+    def stats(self) -> dict:
+        return {
+            "size": len(self._entries),
+            "maxsize": self.maxsize,
+            "hits": self.hits,
+            "misses": self.misses,
+            "stale": self.stale,
+            "evictions": self.evictions,
+            "hit_rate": self.hit_rate,
+        }

@@ -1,0 +1,262 @@
+"""Relabel-invariant flow fingerprints: the service's plan-cache keys.
+
+The paper targets highly dynamic environments (§1) where the same logical
+flow keeps arriving with re-shuffled task ids and drifting statistics.  A
+fingerprint canonicalizes a ``core.Flow`` so that
+
+* *isomorphic* flows — identical up to a permutation of task ids — map to
+  the same digest AND the same canonical ``Flow`` (bit-equal cost/sel
+  arrays), so a cached plan for one serves the other exactly;
+* the digest is computed from *quantized* cost/selectivity buckets
+  (log-space, ``resolution`` relative width), so a stats-backed flow keeps
+  its fingerprint under small EMA jitter and changes it when a statistic
+  moves a bucket — the drift trigger ``service.server`` polls.
+
+Canonicalization is individualization-refinement over the precedence DAG:
+
+1. initial colors = dense ranks of (cost bucket, sel bucket);
+2. Weisfeiler-Leman refinement with sorted multisets of direct-predecessor
+   and direct-successor colors (direct = transitive reduction, which is
+   unique for a DAG) to a fixpoint;
+3. repeatedly place the minimum-color task, re-refining whenever a color
+   cell splits.  Color ties break on exact (cost, sel) — data, not labels,
+   so invariance is preserved.  Remaining ties are either mutually
+   *interchangeable* tasks (identical metadata, identical predecessor and
+   successor closures — placing them in any order yields the same canonical
+   form) or genuinely ambiguous, in which case every candidate branch is
+   explored and the lexicographically smallest complete form wins.
+
+The branch step is exponential only for flows with many exact-duplicate,
+non-interchangeable tasks; a ``budget`` bounds it, falling back to a
+deterministic (but label-*dependent*) index tie-break beyond the budget —
+correctness is unaffected, only cache sharing between relabelings of such
+pathological flows is lost.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import math
+
+import numpy as np
+
+from ..core.flow import Flow
+
+__all__ = [
+    "Fingerprint",
+    "fingerprint",
+    "stat_buckets",
+    "canon_equal",
+    "CanonBudgetExceeded",
+]
+
+_VERSION = 1
+_ZERO_BUCKET = -(1 << 31)  # sentinel bucket for zero-cost tasks
+
+
+class CanonBudgetExceeded(Exception):
+    """Internal: ambiguous-tie branching exceeded the search budget."""
+
+
+def canon_equal(a: Flow, b: Flow) -> bool:
+    """Bit-exact flow identity: same precedence closure and same exact
+    cost/sel arrays.  THE equality under which a cached/coalesced plan
+    serves a request with identical f64 cost — used by both the cache's
+    exact-hit check and the server's in-flight coalescing."""
+    return (
+        a.n == b.n
+        and a.pred_mask == b.pred_mask
+        and np.array_equal(a.cost, b.cost)
+        and np.array_equal(a.sel, b.sel)
+    )
+
+
+def stat_buckets(x, resolution: float = 0.05) -> np.ndarray:
+    """Log-space quantization: values within ``resolution`` relative width
+    share an int64 bucket (zero gets a sentinel).  Monotone, so bucket
+    comparisons order like the underlying statistics."""
+    if resolution <= 0:
+        raise ValueError("resolution must be positive")
+    x = np.asarray(x, dtype=np.float64)
+    out = np.full(x.shape, _ZERO_BUCKET, dtype=np.int64)
+    pos = x > 0
+    out[pos] = np.floor(np.log(x[pos]) / math.log1p(resolution)).astype(
+        np.int64
+    )
+    return out
+
+
+def _refine(colors: list, dpreds, dsuccs, rounds: int) -> list:
+    """WL color refinement to a fixpoint (or ``rounds``), dense re-ranking
+    each round.  Signatures use only label-invariant data, so isomorphic
+    flows refine to corresponding colorings."""
+    n = len(colors)
+    for _ in range(rounds):
+        sigs = [
+            (
+                colors[v],
+                tuple(sorted(colors[p] for p in dpreds[v])),
+                tuple(sorted(colors[s] for s in dsuccs[v])),
+            )
+            for v in range(n)
+        ]
+        rank = {s: i for i, s in enumerate(sorted(set(sigs)))}
+        new = [rank[s] for s in sigs]
+        if new == colors:
+            break
+        colors = new
+    return colors
+
+
+def _interchangeable(flow: Flow, cell: list) -> bool:
+    """True iff all tasks in ``cell`` are mutually swappable: identical
+    predecessor and successor closures (which also forbids edges among
+    them).  Callers ensure identical exact metadata first."""
+    v0 = cell[0]
+    return all(
+        flow.pred_mask[v] == flow.pred_mask[v0]
+        and flow.succ_mask[v] == flow.succ_mask[v0]
+        for v in cell[1:]
+    )
+
+
+def _canon_order(
+    flow: Flow, bc: np.ndarray, bs: np.ndarray, budget: int
+) -> list:
+    """Canonical placement order (old task ids, canonical position order)."""
+    n = flow.n
+    cost, sel = flow.cost, flow.sel
+    dpred_sets = flow.direct_preds()
+    dpreds = [sorted(s) for s in dpred_sets]
+    dsuccs: list = [[] for _ in range(n)]
+    for v in range(n):
+        for p in dpreds[v]:
+            dsuccs[p].append(v)
+    pairs = list(zip(bc.tolist(), bs.tolist()))
+    rank0 = {s: i for i, s in enumerate(sorted(set(pairs)))}
+    colors0 = [rank0[pairs[v]] for v in range(n)]
+    red_edges = [(p, v) for v in range(n) for p in dpreds[v]]
+    state = {"budget": budget}
+
+    def form_key(order: list) -> tuple:
+        pos = [0] * n
+        for i, v in enumerate(order):
+            pos[v] = i
+        return (
+            tuple(int(bc[v]) for v in order),
+            tuple(int(bs[v]) for v in order),
+            tuple(sorted((pos[a], pos[b]) for a, b in red_edges)),
+            tuple(float(cost[v]) for v in order),
+            tuple(float(sel[v]) for v in order),
+        )
+
+    def run(colors: list, order: list, dirty: bool, strict: bool) -> list:
+        colors = list(colors)
+        order = list(order)
+        while len(order) < n:
+            if dirty:
+                colors = _refine(colors, dpreds, dsuccs, n + 2)
+                dirty = False
+            placed = set(order)
+            cmin = min(colors[v] for v in range(n) if v not in placed)
+            cell = [
+                v for v in range(n) if v not in placed and colors[v] == cmin
+            ]
+            split = len(cell) > 1
+            if split:
+                kmin = min((cost[v], sel[v]) for v in cell)
+                cand = [v for v in cell if (cost[v], sel[v]) == kmin]
+            else:
+                cand = cell
+            if len(cand) == 1 or _interchangeable(flow, cand):
+                for v in sorted(cand):
+                    order.append(v)
+                    colors[v] = -len(order)  # unique placed color
+                dirty = split
+                continue
+            if not strict:
+                v = min(cand)  # label-dependent fallback, deterministic
+                order.append(v)
+                colors[v] = -len(order)
+                dirty = True
+                continue
+            best_key, best_order = None, None
+            for v in cand:
+                state["budget"] -= 1
+                if state["budget"] < 0:
+                    raise CanonBudgetExceeded
+                c2 = list(colors)
+                c2[v] = -(len(order) + 1)
+                done = run(c2, order + [v], True, True)
+                key = form_key(done)
+                if best_key is None or key < best_key:
+                    best_key, best_order = key, done
+            return best_order
+        return order
+
+    try:
+        return run(colors0, [], True, True)
+    except CanonBudgetExceeded:
+        return run(colors0, [], True, False)
+
+
+@dataclasses.dataclass(frozen=True)
+class Fingerprint:
+    """A flow's canonical identity: digest + the relabeling that maps the
+    original task ids onto canonical positions."""
+
+    digest: str
+    n: int
+    old_of_new: tuple  # canonical position i held by original task old_of_new[i]
+    canon: Flow  # flow.relabel(old_of_new): the canonical-space flow
+    resolution: float
+
+    def to_original(self, canon_order) -> list:
+        """Translate a canonical-space plan back to original task ids."""
+        return [self.old_of_new[v] for v in canon_order]
+
+    def to_canonical(self, orig_order) -> list:
+        """Translate an original-space plan into canonical task ids."""
+        new_of_old = [0] * self.n
+        for i, v in enumerate(self.old_of_new):
+            new_of_old[v] = i
+        return [new_of_old[v] for v in orig_order]
+
+
+def fingerprint(
+    flow: Flow, resolution: float = 0.05, budget: int = 64
+) -> Fingerprint:
+    """Fingerprint ``flow``: canonicalize, then digest the canonical
+    structure + quantized stat buckets.
+
+    The digest sees *buckets*, not exact floats — drift inside a bucket
+    keeps the fingerprint, a bucket move changes it.  The returned
+    ``canon`` flow keeps exact metadata so the cache can verify exact
+    hits (duplicates / isomorphic repeats) before serving a plan.
+    """
+    bc = stat_buckets(flow.cost, resolution)
+    bs = stat_buckets(flow.sel, resolution)
+    old_of_new = _canon_order(flow, bc, bs, budget)
+    canon, _ = flow.relabel(old_of_new)
+    red = canon.direct_preds()
+    edges = tuple(
+        sorted((p, v) for v in range(canon.n) for p in red[v])
+    )
+    payload = (
+        _VERSION,
+        repr(float(resolution)),
+        canon.n,
+        tuple(int(b) for b in bc[list(old_of_new)]),
+        tuple(int(b) for b in bs[list(old_of_new)]),
+        edges,
+    )
+    digest = hashlib.blake2b(
+        repr(payload).encode(), digest_size=16
+    ).hexdigest()
+    return Fingerprint(
+        digest=digest,
+        n=flow.n,
+        old_of_new=tuple(int(v) for v in old_of_new),
+        canon=canon,
+        resolution=resolution,
+    )

@@ -1,0 +1,400 @@
+"""The flow-optimization service: cached, batched, drift-aware plan serving.
+
+``FlowOptimizationService`` answers streams of "optimize this Flow with
+this registry optimizer" requests at high throughput:
+
+1. every request is **canonicalized** (``service.fingerprint``): plans are
+   computed and cached in canonical task space, so exact duplicates and
+   isomorphic relabelings of a flow share one plan, each client receiving
+   it translated back through its own permutation — with *bit-identical*
+   f64 cost;
+2. cache misses in one ``flush`` are exact-**coalesced** (identical
+   canonical flows compute once) and, for the population hill-climb family
+   (``service.batcher.FUSABLE``), **shape-bucketed** and fused into one
+   per-row device sweep per bucket — B unrelated flows for the cost of one
+   dispatch.  Other registry optimizers (``batched-mimo``,
+   ``batched-pgreedy``, the scalar family, ...) dispatch per request on
+   their canonical flows, still cached and coalesced;
+3. a **drift hook** closes the paper's dynamic-statistics loop: flows
+   backed by live ``pipeline.stats.FlowStats`` are watched, and
+   ``poll_drift`` re-fingerprints them — when a statistic moves a
+   quantization bucket the stale cached plans are invalidated and the flow
+   is re-enqueued for optimization.
+
+Serving is *exact* by construction: ``dispatch_one`` (canonical registry
+dispatch, no cache, no batching) is the reference path, and every cached /
+coalesced / bucket-dispatched answer equals it to f64 (pinned in
+``tests/test_service.py``; measured in ``benchmarks/bench_service.py``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import inspect
+import time
+from typing import Any, Iterable
+
+from ..core.flow import Flow
+from ..optim import api
+from . import batcher
+from .cache import CacheEntry, PlanCache
+from .fingerprint import Fingerprint, canon_equal, fingerprint
+
+__all__ = ["OptimizeResult", "DriftEvent", "FlowOptimizationService"]
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimizeResult:
+    """Per-request serving outcome (plan in the *request's* task ids)."""
+
+    order: tuple  # valid execution plan for the submitted flow
+    scm: float  # the optimizer's reported cost (f64)
+    optimizer: str
+    fingerprint: str  # canonical digest the plan is cached under
+    cache_hit: bool  # served from a previous flush's cache entry
+    coalesced: bool  # shared an in-flight computation this flush
+    batch_size: int  # requests fused into the producing device dispatch
+    wall_time_s: float
+
+
+@dataclasses.dataclass(frozen=True)
+class DriftEvent:
+    """One watched flow whose fingerprint moved (or was first optimized)."""
+
+    key: Any
+    old_digest: str | None
+    new_digest: str
+    invalidated: int  # cache entries dropped for the old digest
+    ticket: int  # request re-enqueued for the drifted flow
+
+
+@dataclasses.dataclass
+class _Pending:
+    ticket: int
+    flow: Flow
+    optimizer: str
+    opts: dict
+    opts_key: tuple
+
+
+@dataclasses.dataclass
+class _Watch:
+    stats: Any  # pipeline.stats.FlowStats (anything with .to_flow())
+    optimizer: str
+    opts: dict
+    digest: str | None = None
+    result: OptimizeResult | None = None
+
+
+class FlowOptimizationService:
+    """Queue/worker loop over the fingerprint cache and the shape batcher.
+
+    ``exact=True`` (default) serves a cached plan only on bit-exact
+    canonical-metadata match; ``exact=False`` also serves same-structure
+    bucket neighbors, re-validated and re-scored on the requesting flow.
+    ``max_batch`` caps requests per fused bucket dispatch (None:
+    unbounded).
+    """
+
+    def __init__(
+        self,
+        cache_size: int = 512,
+        resolution: float = 0.05,
+        max_batch: int | None = None,
+        exact: bool = True,
+        default_optimizer: str = "batched-ro3",
+    ):
+        self.cache = PlanCache(cache_size)
+        self.resolution = resolution
+        self.max_batch = max_batch
+        self.exact = exact
+        self.default_optimizer = default_optimizer
+        self._queue: list[_Pending] = []
+        self._results: dict[int, OptimizeResult] = {}
+        self._next_ticket = 0
+        self._watched: dict[Any, _Watch] = {}
+        # serving counters
+        self.requests = 0
+        self.cache_hits = 0
+        self.coalesced_requests = 0
+        self.device_passes = 0  # fused searches dispatched to the device
+        self.batched_dispatches = 0  # of which: cross-request bucket sweeps
+        self.fallback_dispatches = 0  # of which: per-request dispatches
+
+    # ------------------------------------------------------------ submission
+    def submit(
+        self, flow: Flow, optimizer: str | None = None, **opts: Any
+    ) -> int:
+        """Enqueue one request; returns a ticket for :meth:`collect`."""
+        name = optimizer or self.default_optimizer
+        opt = api.get_optimizer(name)  # fail fast on unknown names
+        if not opt.supports(flow):
+            raise ValueError(
+                f"optimizer {name!r} does not support this flow "
+                f"(n={flow.n}); pick one whose supports() accepts it"
+            )
+        # fail fast on malformed opts too: a flush-time dispatch error
+        # would drop every other pending request's result with it
+        params = inspect.signature(opt.fn).parameters
+        unknown = [o for o in opts if o not in params]
+        if unknown:
+            raise ValueError(
+                f"optimizer {name!r} does not accept opts {unknown}; "
+                f"its parameters are {list(params)[1:]}"
+            )
+        ticket = self._next_ticket
+        self._next_ticket += 1
+        self._queue.append(
+            _Pending(
+                ticket=ticket,
+                flow=flow,
+                optimizer=name,
+                opts=dict(opts),
+                opts_key=tuple(sorted(opts.items())),
+            )
+        )
+        self.requests += 1
+        return ticket
+
+    def collect(self, ticket: int) -> OptimizeResult:
+        """Pop a flushed result by ticket."""
+        return self._results.pop(ticket)
+
+    def serve(
+        self,
+        flows: Iterable[Flow],
+        optimizer: str | None = None,
+        **opts: Any,
+    ) -> list[OptimizeResult]:
+        """Convenience: submit every flow, flush once, return in order."""
+        tickets = [self.submit(f, optimizer, **opts) for f in flows]
+        self.flush()
+        return [self.collect(t) for t in tickets]
+
+    # ------------------------------------------------------------- reference
+    def dispatch_one(
+        self, flow: Flow, optimizer: str | None = None, **opts: Any
+    ) -> OptimizeResult:
+        """The single-flow reference path: canonical registry dispatch with
+        no cache and no cross-request batching.  Every served answer equals
+        this, flow by flow, in f64."""
+        name = optimizer or self.default_optimizer
+        t0 = time.perf_counter()
+        fp = fingerprint(flow, self.resolution)
+        order_c, cost = api.get_optimizer(name).raw(fp.canon, **opts)
+        self.device_passes += 1
+        order = fp.to_original(order_c)
+        assert flow.is_valid_order(order)
+        return OptimizeResult(
+            order=tuple(order),
+            scm=float(cost),
+            optimizer=name,
+            fingerprint=fp.digest,
+            cache_hit=False,
+            coalesced=False,
+            batch_size=1,
+            wall_time_s=time.perf_counter() - t0,
+        )
+
+    # ------------------------------------------------------------------ flush
+    def flush(self) -> dict[int, OptimizeResult]:
+        """Process the queue: serve hits, coalesce duplicates, fuse bucket
+        dispatches, fill the cache.  Returns ticket -> result (also kept
+        for :meth:`collect`)."""
+        t0 = time.perf_counter()
+        pending, self._queue = self._queue, []
+        out: dict[int, OptimizeResult] = {}
+        misses: dict[tuple, list] = {}
+        fp_memo: dict[int, Fingerprint] = {}  # id(flow) -> fp, this flush
+        for req in pending:
+            fp = fp_memo.get(id(req.flow))
+            if fp is None:
+                fp = fingerprint(req.flow, self.resolution)
+                fp_memo[id(req.flow)] = fp
+            key = PlanCache.key(fp.digest, req.optimizer, req.opts_key)
+            entry = self.cache.get(key, fp.canon, exact=self.exact)
+            if entry is not None:
+                self.cache_hits += 1
+                out[req.ticket] = self._translate(
+                    req, fp, entry.order, entry.cost,
+                    cache_hit=True, coalesced=False,
+                    batch_size=entry.batch_size, t0=t0,
+                )
+                continue
+            misses.setdefault(key, []).append((req, fp))
+
+        # exact-coalesce within each digest group: identical canonical flows
+        # compute once, later members ride along.
+        reps: list[tuple] = []  # (key, [(req, fp), ...]) per computation
+        for key, members in misses.items():
+            subgroups: list[list] = []
+            for req, fp in members:
+                for sg in subgroups:
+                    if canon_equal(fp.canon, sg[0][1].canon):
+                        sg.append((req, fp))
+                        break
+                else:
+                    subgroups.append([(req, fp)])
+            reps.extend((key, sg) for sg in subgroups)
+
+        # split fusable representatives into shape buckets
+        buckets: dict[tuple, list[int]] = {}
+        solo: list[int] = []
+        for i, (key, sg) in enumerate(reps):
+            req0, fp0 = sg[0]
+            if req0.optimizer in batcher.FUSABLE and fp0.canon.n >= 2:
+                bk = (
+                    batcher.bucket_n(fp0.canon.n),
+                    req0.optimizer,
+                    req0.opts_key,
+                )
+                buckets.setdefault(bk, []).append(i)
+            else:
+                solo.append(i)
+
+        planned: dict[int, tuple] = {}  # rep idx -> (order_c, cost, batch)
+        for (_, optimizer, _), idxs in buckets.items():
+            step = self.max_batch or len(idxs)
+            for lo in range(0, len(idxs), step):
+                chunk = idxs[lo : lo + step]
+                flows = [reps[i][1][0][1].canon for i in chunk]
+                opts = reps[chunk[0]][1][0][0].opts
+                results = batcher.dispatch_bucket(flows, optimizer, opts)
+                self.device_passes += 1
+                self.batched_dispatches += 1
+                for i, (order_c, cost) in zip(chunk, results):
+                    planned[i] = (order_c, cost, len(chunk))
+        for i in solo:
+            req0, fp0 = reps[i][1][0]
+            order_c, cost = api.get_optimizer(req0.optimizer).raw(
+                fp0.canon, **req0.opts
+            )
+            self.device_passes += 1
+            self.fallback_dispatches += 1
+            planned[i] = (order_c, cost, 1)
+
+        for i, (key, sg) in enumerate(reps):
+            order_c, cost, batch = planned[i]
+            req0, fp0 = sg[0]
+            self.cache.put(
+                key,
+                CacheEntry(
+                    digest=key[0],
+                    optimizer=req0.optimizer,
+                    opts_key=req0.opts_key,
+                    order=tuple(int(v) for v in order_c),
+                    cost=float(cost),
+                    canon=fp0.canon,
+                    batch_size=batch,
+                ),
+            )
+            for j, (req, fp) in enumerate(sg):
+                if j > 0:
+                    self.coalesced_requests += 1
+                out[req.ticket] = self._translate(
+                    req, fp, order_c, cost,
+                    cache_hit=False, coalesced=j > 0,
+                    batch_size=batch, t0=t0,
+                )
+        self._results.update(out)
+        return out
+
+    def _translate(
+        self, req: _Pending, fp: Fingerprint, order_c, cost,
+        *, cache_hit: bool, coalesced: bool, batch_size: int, t0: float,
+    ) -> OptimizeResult:
+        order = fp.to_original(order_c)
+        assert req.flow.is_valid_order(order)
+        cost = float(cost)
+        if not self.exact and cache_hit:
+            # bucket-neighbor serving: a cached plan may have been scored
+            # on different exact metadata — re-score locally (linear SCM;
+            # fresh dispatches keep their optimizer's own cost model).
+            from ..core.cost import scm
+
+            cost = float(scm(req.flow, order))
+        return OptimizeResult(
+            order=tuple(order),
+            scm=cost,
+            optimizer=req.optimizer,
+            fingerprint=fp.digest,
+            cache_hit=cache_hit,
+            coalesced=coalesced,
+            batch_size=batch_size,
+            wall_time_s=time.perf_counter() - t0,
+        )
+
+    # ------------------------------------------------------------ drift hook
+    def watch(
+        self,
+        key: Any,
+        stats: Any,
+        optimizer: str | None = None,
+        **opts: Any,
+    ) -> None:
+        """Track a live-statistics flow (``pipeline.stats.FlowStats`` or
+        anything with ``.to_flow()``); :meth:`poll_drift` re-optimizes it
+        whenever its fingerprint moves."""
+        self._watched[key] = _Watch(
+            stats=stats,
+            optimizer=optimizer or self.default_optimizer,
+            opts=dict(opts),
+        )
+
+    def watched_plan(self, key: Any) -> OptimizeResult | None:
+        return self._watched[key].result
+
+    def poll_drift(self, flush: bool = True) -> list[DriftEvent]:
+        """Re-fingerprint every watched flow; where the stat buckets moved,
+        invalidate the stale cached plans and re-enqueue optimization.
+        With ``flush=True`` the re-optimizations are served immediately and
+        recorded on the watch entries."""
+        events: list[DriftEvent] = []
+        tickets: dict[Any, int] = {}
+        for wkey, w in self._watched.items():
+            flow = w.stats.to_flow()
+            fp = fingerprint(flow, self.resolution)
+            if fp.digest == w.digest:
+                continue  # still inside every stat's bucket: plan stands
+            invalidated = (
+                self.cache.invalidate(w.digest) if w.digest else 0
+            )
+            ticket = self.submit(flow, w.optimizer, **w.opts)
+            tickets[wkey] = ticket
+            events.append(
+                DriftEvent(
+                    key=wkey,
+                    old_digest=w.digest,
+                    new_digest=fp.digest,
+                    invalidated=invalidated,
+                    ticket=ticket,
+                )
+            )
+            w.digest = fp.digest
+        if flush and tickets:
+            self.flush()
+            for wkey, ticket in tickets.items():
+                self._watched[wkey].result = self.collect(ticket)
+        return events
+
+    # ------------------------------------------------------------- reporting
+    @property
+    def amortized_hit_rate(self) -> float:
+        """Requests answered without their own device dispatch (cache hits
+        + coalesced riders) over all requests."""
+        served = self.cache_hits + self.coalesced_requests
+        return served / self.requests if self.requests else 0.0
+
+    def stats(self) -> dict:
+        return {
+            "requests": self.requests,
+            "cache_hits": self.cache_hits,
+            "coalesced": self.coalesced_requests,
+            "amortized_hit_rate": self.amortized_hit_rate,
+            "device_passes": self.device_passes,
+            "batched_dispatches": self.batched_dispatches,
+            "fallback_dispatches": self.fallback_dispatches,
+            "passes_per_request": (
+                self.device_passes / self.requests if self.requests else 0.0
+            ),
+            "cache": self.cache.stats(),
+        }

@@ -169,6 +169,116 @@ def test_kernel_ro3_registered_with_capabilities():
     assert res.scm <= ro3(flow)[1] + 1e-9
 
 
+# ------------------------------------------- per-row (heterogeneous) metadata
+def _per_row_args(flows, rows_per_flow=1, seed=0):
+    """Stack one-or-more seeded rows per flow into per-row metadata arrays."""
+    rng = random.Random(seed)
+    cs, ss, ps, os_ = [], [], [], []
+    for f in flows:
+        rows = [ro2(f)[0]] + [
+            random_plan(f, rng) for _ in range(rows_per_flow - 1)
+        ]
+        for r in rows:
+            cs.append(f.cost)
+            ss.append(f.sel)
+            ps.append(batched.pred_matrix(f))
+            os_.append(r)
+    with enable_x64():
+        return (
+            jnp.asarray(np.stack(cs), dtype=jnp.float64),
+            jnp.asarray(np.stack(ss), dtype=jnp.float64),
+            jnp.asarray(np.stack(ps)),
+            jnp.asarray(np.asarray(os_, dtype=np.int32)),
+        )
+
+
+def test_per_row_kernel_matches_ref_vmapped_and_scalar():
+    """Heterogeneous per-row lanes (each row its own flow): kernel == oracle
+    (orders AND steps) == vmapped machine, and an RO-II-seeded row == scalar
+    ro3 of its flow — the form the service's cross-request batcher fuses."""
+    flows = [random_flow(12, 0.1 * i, rng=40 + i) for i in range(6)]
+    c, s, p, o = _per_row_args(flows)
+    with enable_x64():
+        kr, ksteps = block_move_sweep_kernel(c, s, p, o)
+        rr, rsteps = block_move_pass_ref(c, s, p, o)
+        vr, vc = batched.block_move_pass_batch(c, s, p, o)
+    np.testing.assert_array_equal(np.asarray(kr), np.asarray(rr))
+    np.testing.assert_array_equal(np.asarray(ksteps), np.asarray(rsteps))
+    np.testing.assert_array_equal(np.asarray(kr), np.asarray(vr))
+    for f, refined, cost in zip(flows, np.asarray(kr), np.asarray(vc)):
+        o3, c3 = ro3(f)
+        assert [int(v) for v in refined] == o3
+        assert cost == pytest.approx(c3, rel=1e-12)
+
+
+def test_per_row_kernel_matches_shared_rows_individually():
+    """Each per-row lane refines exactly as the same row under the shared
+    (n,) metadata form of its own flow."""
+    flows = [random_flow(10, 0.3, rng=60 + i) for i in range(4)]
+    c, s, p, o = _per_row_args(flows, rows_per_flow=3, seed=3)
+    with enable_x64():
+        kr, _ = block_move_sweep_kernel(c, s, p, o)
+    kr = np.asarray(kr)
+    for i, f in enumerate(flows):
+        rows = np.asarray(o)[3 * i : 3 * i + 3]
+        cf, sf, pf, of = _device_args(f, rows)
+        with enable_x64():
+            want, _ = block_move_sweep_kernel(cf, sf, pf, of)
+        np.testing.assert_array_equal(kr[3 * i : 3 * i + 3], np.asarray(want))
+
+
+def test_per_row_pad_lanes_are_inert():
+    """Service-batcher encoding: rows padded with neutral tasks (cost 0,
+    sel 1, pinned after every real task) refine move-for-move like the
+    unpadded rows, with bit-equal device costs — kernel and vmapped."""
+    for seed in (0, 1, 2):
+        f = random_flow(9 + seed, 0.4, rng=70 + seed)
+        m, n_b = f.n, 16
+        rng = random.Random(seed)
+        rows = [ro2(f)[0]] + [random_plan(f, rng) for _ in range(4)]
+        cf, sf, pf, of = _device_args(f, rows)
+        cp = np.zeros(n_b)
+        cp[:m] = f.cost
+        sp = np.ones(n_b)
+        sp[:m] = f.sel
+        pp = np.zeros((n_b, n_b), dtype=bool)
+        pp[:m, :m] = batched.pred_matrix(f)
+        pp[:m, m:] = True
+        arr = np.empty((len(rows), n_b), dtype=np.int32)
+        arr[:, :m] = np.asarray(rows, dtype=np.int32)
+        arr[:, m:] = np.arange(m, n_b, dtype=np.int32)
+        B = len(rows)
+        with enable_x64():
+            ur, uc = batched.block_move_pass_batch(cf, sf, pf, of)
+            args = (
+                jnp.asarray(np.tile(cp, (B, 1)), dtype=jnp.float64),
+                jnp.asarray(np.tile(sp, (B, 1)), dtype=jnp.float64),
+                jnp.asarray(np.tile(pp, (B, 1, 1))),
+                jnp.asarray(arr),
+            )
+            for kern in (False, True):
+                pr, pc = batched.block_move_pass_batch(*args, kernel=kern)
+                np.testing.assert_array_equal(
+                    np.asarray(pr)[:, :m], np.asarray(ur)
+                )
+                np.testing.assert_array_equal(np.asarray(pr)[:, m:], arr[:, m:])
+                np.testing.assert_allclose(
+                    np.asarray(pc), np.asarray(uc), rtol=0, atol=0
+                )
+
+
+def test_segment_reorder_population_kernel_backend_matches():
+    """The MIMO per-row encoding refines identically on the fused kernel."""
+    from repro.core import butterfly, butterfly_mimo_segments
+    from repro.optim import mimo_batch
+
+    mimo = butterfly(butterfly_mimo_segments(3, 5, 0.4, rng=5))
+    enc = mimo_batch.encode_population([mimo, mimo], T=8)
+    want = mimo_batch.segment_reorder_population(enc)
+    got = mimo_batch.segment_reorder_population(enc, kernel=True)
+    np.testing.assert_array_equal(got, want)
+
+
 # ------------------------------------------------- hypothesis property sweep
 if HAVE_HYPOTHESIS:
 

@@ -185,19 +185,29 @@ def test_block_move_pass_batch_per_row_metadata():
         assert c == pytest.approx(want_cost, rel=1e-12)
 
 
-def test_block_move_pass_batch_per_row_rejects_kernel_backend():
+def test_block_move_pass_batch_per_row_kernel_backend_matches_vmapped():
+    """The fused Pallas kernel accepts the per-row metadata form (ported
+    for the flow-optimization service) and reaches the vmapped machine's
+    fixpoints on MIMO segment lanes."""
     import jax.numpy as jnp
+    from jax.experimental import enable_x64
 
     from repro.optim import block_move_pass_batch
 
-    with pytest.raises(ValueError, match="shared"):
-        block_move_pass_batch(
-            jnp.ones((2, 4)),
-            jnp.ones((2, 4)),
-            jnp.zeros((2, 4, 4), dtype=bool),
-            jnp.tile(jnp.arange(4, dtype=jnp.int32), (2, 1)),
-            kernel=True,
+    m = make_butterfly(3, 5, 0.4, rng=9)
+    enc = encode_mimo(m, T=8)
+    S, T = enc["order"].shape
+    with enable_x64():
+        args = (
+            jnp.asarray(enc["cost"], dtype=jnp.float64),
+            jnp.asarray(enc["sel"], dtype=jnp.float64),
+            jnp.asarray(enc["pred"]),
+            jnp.asarray(enc["order"]),
         )
+        kr, kc = block_move_pass_batch(*args, kernel=True)
+        vr, vc = block_move_pass_batch(*args)
+    np.testing.assert_array_equal(np.asarray(kr), np.asarray(vr))
+    np.testing.assert_allclose(np.asarray(kc), np.asarray(vc), rtol=1e-12)
 
 
 # --------------------------------------------------- differential: butterfly

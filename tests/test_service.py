@@ -1,0 +1,403 @@
+"""Flow-optimization service: fingerprints, cache, batcher, drift loop.
+
+The serving contract under test: every answer — cache hit, coalesced
+rider, or fused bucket dispatch — equals the service's single-flow
+reference path (``dispatch_one``: canonical registry dispatch) in f64,
+while duplicates/isomorphic repeats cost zero device passes.
+
+Seeded checks always run; the hypothesis section widens the fingerprint
+property space when the package is available (CI has it)."""
+import random
+
+import numpy as np
+import pytest
+
+from repro.core import Flow, random_flow, scm, workload_mixture
+from repro.core.mimo import is_mimo_flow
+from repro.pipeline.ops import PipelineOp
+from repro.pipeline.stats import FlowStats
+from repro.service import (
+    FlowOptimizationService,
+    PlanCache,
+    dispatch_bucket,
+    fingerprint,
+    stat_buckets,
+)
+from repro.service.cache import CacheEntry
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - CI installs hypothesis
+    HAVE_HYPOTHESIS = False
+
+OPTS = {"population": 8, "seed": 0}  # small search: tests pin parity, not SCM
+
+
+def _relabeled(flow: Flow, seed: int) -> Flow:
+    rng = random.Random(seed)
+    perm = list(range(flow.n))
+    rng.shuffle(perm)
+    return flow.relabel(perm)[0]
+
+
+# --------------------------------------------------------------- fingerprint
+@pytest.mark.parametrize("n,pc,seed", [(2, 0.0, 0), (8, 0.3, 1), (14, 0.5, 2),
+                                       (20, 0.0, 3), (17, 0.7, 4)])
+def test_fingerprint_invariant_under_relabeling(n, pc, seed):
+    """Digest AND exact canonical form are permutation-invariant."""
+    f = random_flow(n, pc, rng=seed)
+    fa = fingerprint(f)
+    for i in range(3):
+        fb = fingerprint(_relabeled(f, 10 * seed + i))
+        assert fa.digest == fb.digest
+        assert np.array_equal(fa.canon.cost, fb.canon.cost)
+        assert np.array_equal(fa.canon.sel, fb.canon.sel)
+        assert fa.canon.pred_mask == fb.canon.pred_mask
+
+
+def test_fingerprint_invariant_with_interchangeable_twins():
+    """Exact-duplicate unconstrained tasks (the ambiguous-cell case) still
+    canonicalize to one form under any relabeling."""
+    cost = np.array([3.0, 1.0, 1.0, 1.0, 5.0])
+    sel = np.array([0.5, 0.9, 0.9, 0.9, 1.2])
+    f = Flow(cost, sel, ((0, 4),))
+    fa = fingerprint(f)
+    for i in range(5):
+        fb = fingerprint(_relabeled(f, i))
+        assert fa.digest == fb.digest
+        assert np.array_equal(fa.canon.cost, fb.canon.cost)
+
+
+def test_fingerprint_invariant_with_symmetric_arms():
+    """Two identical precedence chains (WL-tied, non-twin: the branch
+    path) canonicalize identically under relabeling."""
+    cost = np.array([2.0, 7.0, 3.0, 7.0, 3.0, 2.0])
+    sel = np.array([1.0, 0.5, 0.8, 0.5, 0.8, 1.0])
+    # 0 -> 1 -> 2 -> 5 and 0 -> 3 -> 4 -> 5, arms exactly identical
+    f = Flow(cost, sel, ((0, 1), (1, 2), (2, 5), (0, 3), (3, 4), (4, 5)))
+    fa = fingerprint(f)
+    for i in range(5):
+        fb = fingerprint(_relabeled(f, i))
+        assert fa.digest == fb.digest
+        assert np.array_equal(fa.canon.cost, fb.canon.cost)
+        assert fa.canon.pred_mask == fb.canon.pred_mask
+
+
+def test_fingerprint_distinguishes_stat_buckets():
+    """A bucket-crossing stat move changes the digest; within-bucket
+    jitter does not (mid-bucket values, 5% resolution vs 0.01% jitter)."""
+    f = random_flow(10, 0.3, rng=7)
+    fp = fingerprint(f)
+    jittered = Flow(f.cost * 1.0001, f.sel, f.edges)
+    assert fingerprint(jittered).digest == fp.digest
+    moved = Flow(f.cost.copy(), f.sel, f.edges)
+    moved.cost[3] *= 2.0
+    assert fingerprint(moved).digest != fp.digest
+    sel_moved = Flow(f.cost, np.where(np.arange(f.n) == 3, f.sel * 2, f.sel),
+                     f.edges)
+    assert fingerprint(sel_moved).digest != fp.digest
+
+
+def test_fingerprint_distinguishes_structure():
+    f = random_flow(9, 0.0, rng=11)
+    g = Flow(f.cost, f.sel, ((0, 1),))
+    assert fingerprint(f).digest != fingerprint(g).digest
+
+
+def test_stat_buckets_monotone_and_zero_sentinel():
+    b = stat_buckets(np.array([0.0, 1e-3, 1.0, 1.05, 1.2, 100.0]), 0.05)
+    assert b[0] < b[1] < b[2] <= b[3] < b[4] < b[5]
+    assert b[0] == np.iinfo(np.int64).min or b[0] < -(1 << 30)
+
+
+# --------------------------------------------------------------------- cache
+def _entry(digest, canon, order, cost, optimizer="x", opts_key=()):
+    return CacheEntry(
+        digest=digest, optimizer=optimizer, opts_key=opts_key,
+        order=tuple(order), cost=cost, canon=canon,
+    )
+
+
+def test_plan_cache_lru_bound_and_eviction_order():
+    cache = PlanCache(maxsize=2)
+    flows = [random_flow(5, 0.0, rng=i) for i in range(3)]
+    keys = []
+    for i, f in enumerate(flows):
+        fp = fingerprint(f)
+        key = PlanCache.key(fp.digest, "x")
+        keys.append((key, fp))
+        cache.put(key, _entry(fp.digest, fp.canon, range(5), float(i)))
+    assert len(cache) == 2 and cache.evictions == 1
+    assert cache.get(keys[0][0], keys[0][1].canon) is None  # oldest evicted
+    assert cache.get(keys[1][0], keys[1][1].canon) is not None
+    # key 1 is now most-recent: inserting a new entry evicts key 2
+    fp0 = keys[0][1]
+    cache.put(keys[0][0], _entry(fp0.digest, fp0.canon, range(5), 9.0))
+    assert cache.get(keys[2][0], keys[2][1].canon) is None
+    assert cache.get(keys[1][0], keys[1][1].canon) is not None
+
+
+def test_plan_cache_exact_check_rejects_bucket_neighbors():
+    """Same digest, different exact metadata: exact mode must not serve."""
+    f = random_flow(6, 0.2, rng=3)
+    fp = fingerprint(f)
+    g = Flow(f.cost * 1.0001, f.sel, f.edges)
+    gp = fingerprint(g)
+    assert gp.digest == fp.digest  # same buckets
+    cache = PlanCache()
+    key = PlanCache.key(fp.digest, "x")
+    cache.put(key, _entry(fp.digest, fp.canon, range(6), 1.0))
+    assert cache.get(key, gp.canon, exact=True) is None
+    assert cache.stale == 1
+    assert cache.get(key, gp.canon, exact=False) is not None
+
+
+def test_plan_cache_invalidate_by_digest():
+    f = random_flow(5, 0.0, rng=4)
+    fp = fingerprint(f)
+    cache = PlanCache()
+    for opt in ("a", "b"):
+        cache.put(PlanCache.key(fp.digest, opt),
+                  _entry(fp.digest, fp.canon, range(5), 1.0, optimizer=opt))
+    assert cache.invalidate(fp.digest) == 2
+    assert len(cache) == 0
+
+
+# ------------------------------------------------------------------- batcher
+def test_bucket_dispatch_matches_single_flow_registry_dispatch():
+    """The fused padded sweep == per-flow registry dispatch, f64-exact,
+    across heterogeneous sizes sharing one bucket."""
+    from repro.optim import get_optimizer
+
+    flows = [random_flow(5 + i, 0.3, rng=20 + i) for i in range(4)]  # n 5..8
+    for optimizer in ("batched-ro3", "kernel-ro3"):
+        got = dispatch_bucket(flows, optimizer, OPTS)
+        for f, (order, cost) in zip(flows, got):
+            want_order, want_cost = get_optimizer(optimizer).raw(f, **OPTS)
+            assert order == want_order
+            assert cost == pytest.approx(want_cost, abs=1e-12)
+
+
+# -------------------------------------------------------------------- server
+def test_served_plans_match_fresh_dispatch_exactly():
+    """Acceptance (test-sized): a mixed workload with duplicates and
+    isomorphic repeats — every served plan's cost equals fresh single-flow
+    dispatch of the same optimizer to 1e-9 (f64) and is never worse."""
+    flows = workload_mixture(3, n_requests=24, size_range=(5, 10))
+    svc = FlowOptimizationService()
+    served = svc.serve(flows, optimizer="batched-ro3", **OPTS)
+    ref = FlowOptimizationService()
+    for f, r in zip(flows, served):
+        fresh = ref.dispatch_one(f, "batched-ro3", **OPTS)
+        assert f.is_valid_order(list(r.order))
+        assert abs(r.scm - fresh.scm) <= 1e-9
+        assert r.scm <= fresh.scm + 1e-9
+        assert r.scm == pytest.approx(scm(f, list(r.order)), rel=1e-12)
+
+
+def test_service_amortizes_device_passes():
+    """Acceptance (test-sized): >= 5x fewer device passes per request than
+    one-at-a-time dispatch on a duplicate-heavy workload."""
+    flows = workload_mixture(5, n_requests=32, dup_fraction=0.25,
+                             iso_fraction=0.15, size_range=(5, 10))
+    svc = FlowOptimizationService()
+    svc.serve(flows, optimizer="batched-ro3", **OPTS)
+    assert svc.device_passes * 5 <= len(flows)
+    assert svc.batched_dispatches == svc.device_passes
+
+
+def test_repeat_requests_hit_the_cache():
+    flows = [random_flow(7, 0.3, rng=30 + i) for i in range(3)]
+    svc = FlowOptimizationService()
+    first = svc.serve(flows, optimizer="batched-ro3", **OPTS)
+    again = svc.serve(flows, optimizer="batched-ro3", **OPTS)
+    iso = svc.serve([_relabeled(f, 1) for f in flows],
+                    optimizer="batched-ro3", **OPTS)
+    assert not any(r.cache_hit for r in first)
+    assert all(r.cache_hit for r in again)
+    assert all(r.cache_hit for r in iso)  # isomorphic repeats hit too
+    for f, a, b in zip(flows, first, again):
+        assert a.order == b.order and a.scm == b.scm
+    for f, a, r in zip(flows, first, iso):
+        assert r.scm == a.scm  # translated plan, identical cost
+    assert svc.device_passes == svc.batched_dispatches  # no re-dispatch
+
+
+def test_duplicates_coalesce_within_one_flush():
+    f = random_flow(8, 0.4, rng=41)
+    svc = FlowOptimizationService()
+    served = svc.serve([f, f, _relabeled(f, 2)],
+                       optimizer="batched-ro3", **OPTS)
+    assert svc.device_passes == 1
+    assert [r.coalesced for r in served] == [False, True, True]
+    assert len({r.scm for r in served}) == 1
+
+
+def test_opts_and_optimizer_partition_the_cache():
+    f = random_flow(7, 0.2, rng=50)
+    svc = FlowOptimizationService()
+    a = svc.serve([f], optimizer="batched-ro3", **OPTS)[0]
+    b = svc.serve([f], optimizer="batched-ro3", population=8, seed=1)[0]
+    c = svc.serve([f], optimizer="ro3")[0]
+    assert not b.cache_hit and not c.cache_hit  # different key: no crosstalk
+    assert svc.fallback_dispatches == 1  # ro3 is not fusable: solo dispatch
+    ref = FlowOptimizationService()
+    assert abs(c.scm - ref.dispatch_one(f, "ro3").scm) <= 1e-9
+    assert a.scm <= scm(f, list(a.order)) + 1e-9
+
+
+def test_mimo_flows_ride_the_service():
+    flows = [f for f in workload_mixture(9, n_requests=16, size_range=(6, 9))
+             if is_mimo_flow(f)]
+    assert flows  # the mixture produces flattened MIMO butterflies
+    svc = FlowOptimizationService()
+    served = svc.serve(flows[:2], optimizer="batched-ro3", **OPTS)
+    for f, r in zip(flows, served):
+        assert f.is_valid_order(list(r.order))
+
+
+def test_unknown_optimizer_and_unsupported_flow_raise():
+    svc = FlowOptimizationService()
+    f = random_flow(30, 0.2, rng=60)
+    with pytest.raises(KeyError):
+        svc.submit(f, "no-such-optimizer")
+    with pytest.raises(ValueError):
+        svc.submit(f, "dp")  # max_n=18 enumeration guard
+
+
+def test_malformed_opts_rejected_at_submit_not_flush():
+    """A bad request must fail at submit: a flush-time dispatch error
+    would drop every other pending request's result with it."""
+    svc = FlowOptimizationService()
+    good = random_flow(6, 0.2, rng=61)
+    t = svc.submit(good, "batched-ro3", **OPTS)
+    with pytest.raises(ValueError, match="does not accept"):
+        svc.submit(random_flow(6, 0.2, rng=62), "batched-ro3",
+                   no_such_opt=1)
+    svc.flush()
+    assert good.is_valid_order(list(svc.collect(t).order))
+
+
+def test_max_batch_splits_buckets_without_changing_plans():
+    flows = [random_flow(8, 0.3, rng=70 + i) for i in range(5)]
+    a = FlowOptimizationService()
+    ra = a.serve(flows, optimizer="batched-ro3", **OPTS)
+    b = FlowOptimizationService(max_batch=2)
+    rb = b.serve(flows, optimizer="batched-ro3", **OPTS)
+    assert a.device_passes == 1 and b.device_passes == 3
+    for x, y in zip(ra, rb):
+        assert x.order == y.order and x.scm == y.scm
+
+
+# --------------------------------------------------------------- drift hook
+def _stats_fixture():
+    def op(i):
+        return PipelineOp(f"op{i}", lambda f: ({}, None), {"x"}, {f"y{i}"},
+                          est_cost=1.0 + i, est_sel=0.5)
+
+    return FlowStats([op(i) for i in range(6)])
+
+
+def test_drift_hook_invalidates_and_reoptimizes():
+    stats = _stats_fixture()
+    svc = FlowOptimizationService()
+    svc.watch("pipe", stats, optimizer="batched-ro3", **OPTS)
+    events = svc.poll_drift()
+    assert len(events) == 1 and events[0].old_digest is None
+    plan0 = svc.watched_plan("pipe")
+    assert plan0 is not None
+    # within-bucket jitter: fingerprint stable, no re-optimization
+    stats.cost[0] *= 1.0001
+    assert svc.poll_drift() == []
+    # bucket move: stale plans invalidated, flow re-enqueued + re-served
+    stats.cost[0] *= 50.0
+    events = svc.poll_drift()
+    assert len(events) == 1
+    assert events[0].invalidated >= 1
+    assert events[0].old_digest != events[0].new_digest
+    plan1 = svc.watched_plan("pipe")
+    new_flow = stats.to_flow()
+    assert new_flow.is_valid_order(list(plan1.order))
+    ref = FlowOptimizationService()
+    fresh = ref.dispatch_one(new_flow, "batched-ro3", **OPTS)
+    assert abs(plan1.scm - fresh.scm) <= 1e-9
+
+
+def test_flowstats_zero_seconds_first_sample_keeps_cost_positive():
+    """Satellite regression: a zero-duration first sample must not collapse
+    the cost prior to 0 (degenerate rank => degenerate downstream plans)."""
+    stats = _stats_fixture()
+    stats.observe(0, rows_in=1000, rows_out=500, seconds=0.0)
+    assert stats.cost[0] > 0
+    flow = stats.to_flow()
+    r = flow.rank()
+    assert np.all(np.isfinite(r))
+    # and the optimizer still produces a valid plan from the estimates
+    from repro.optim import get_optimizer
+
+    order, _ = get_optimizer("ro3").raw(flow)
+    assert flow.is_valid_order(order)
+
+
+# ----------------------------------------------------------- workload mixture
+def test_workload_mixture_deterministic_and_mixed():
+    a = workload_mixture(17, n_requests=40, size_range=(5, 9))
+    b = workload_mixture(17, n_requests=40, size_range=(5, 9))
+    assert len(a) == 40
+    for fa, fb in zip(a, b):
+        assert np.array_equal(fa.cost, fb.cost) and fa.edges == fb.edges
+    assert any(is_mimo_flow(f) for f in a)
+    assert any(f.pc_fraction() == 0 for f in a if not is_mimo_flow(f))
+    # >= 30% duplicate/isomorphic repeats: count repeated fingerprints
+    digests = [fingerprint(f).digest for f in a]
+    repeats = len(digests) - len(set(digests))
+    assert repeats >= 0.3 * len(a) - 1
+
+
+# ------------------------------------------------- hypothesis property sweep
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        n=st.integers(min_value=2, max_value=16),
+        pc=st.floats(min_value=0.0, max_value=0.8),
+        seed=st.integers(min_value=0, max_value=2**31 - 1),
+        perm_seed=st.integers(min_value=0, max_value=2**31 - 1),
+    )
+    def test_fingerprint_relabel_invariance_property(n, pc, seed, perm_seed):
+        """Random flows x random permutations: digest and exact canonical
+        form are invariant; different bucket vectors are distinguished."""
+        f = random_flow(n, pc, rng=seed)
+        g = _relabeled(f, perm_seed)
+        fa, fb = fingerprint(f), fingerprint(g)
+        assert fa.digest == fb.digest
+        assert np.array_equal(fa.canon.cost, fb.canon.cost)
+        assert np.array_equal(fa.canon.sel, fb.canon.sel)
+        assert fa.canon.pred_mask == fb.canon.pred_mask
+        moved = Flow(f.cost * 4.0, f.sel, f.edges)
+        assert fingerprint(moved).digest != fa.digest
+
+    @settings(max_examples=10, deadline=None)
+    @given(
+        n=st.integers(min_value=3, max_value=9),
+        pc=st.floats(min_value=0.0, max_value=0.6),
+        seed=st.integers(min_value=0, max_value=2**31 - 1),
+    )
+    def test_served_equals_fresh_dispatch_property(n, pc, seed):
+        """Any flow + a relabeled twin served together: both answers equal
+        fresh single-flow dispatch in f64 and translate to valid plans."""
+        f = random_flow(n, pc, rng=seed)
+        g = _relabeled(f, seed ^ 0x5A5A)
+        svc = FlowOptimizationService()
+        opts = {"population": 4, "seed": 0}
+        ra, rb = svc.serve([f, g], optimizer="batched-ro3", **opts)
+        assert svc.device_passes == 1  # coalesced through the fingerprint
+        fresh = FlowOptimizationService().dispatch_one(
+            f, "batched-ro3", **opts
+        )
+        assert abs(ra.scm - fresh.scm) <= 1e-9
+        assert abs(rb.scm - fresh.scm) <= 1e-9
+        assert f.is_valid_order(list(ra.order))
+        assert g.is_valid_order(list(rb.order))
