@@ -59,7 +59,13 @@ def _flows(quick: bool) -> list[tuple[str, object]]:
     return out
 
 
-def run(reps: int = 3, quick: bool = False) -> list[dict]:
+def run(
+    reps: int = 3, quick: bool = False, shards: int | None = None
+) -> list[dict]:
+    """``shards`` pins the island count for the mesh-sharded entries
+    (forwarded by ``benchmarks.run --shards N``); their default adapts to
+    the local device count, so on a single-device host they degrade to the
+    bit-identical shards=1 path."""
     rows = []
     for fname, f in _flows(quick):
         c0 = scm(f, random_plan(f, 0))
@@ -102,11 +108,19 @@ def run(reps: int = 3, quick: bool = False) -> list[dict]:
             opt = get_optimizer(name)
             if not opt.supports(f):
                 continue
+            extra = (
+                {"shards": shards}
+                if shards and "shards" in inspect.signature(opt.fn).parameters
+                else {}
+            )
             if STOCHASTIC in opt.tags:
                 # vary the seed so best-of-reps actually samples the search
-                results = [opt(f, **{_seed_kw(opt): rep}) for rep in range(reps)]
+                results = [
+                    opt(f, **{_seed_kw(opt): rep}, **extra)
+                    for rep in range(reps)
+                ]
             else:  # deterministic: reps only average out timing noise
-                results = [opt(f) for _ in range(reps)]
+                results = [opt(f, **extra) for _ in range(reps)]
             best = min(r.scm for r in results)
             rows.append(
                 {

@@ -1,0 +1,142 @@
+"""Population-sharding scaling: island-model search across a device mesh.
+
+Fills the (population x shard count) grid for the sharded RO-III search
+(``optim.sharded``) and reports, per cell:
+
+* ``wall_s`` — measured wall time on THIS host.  With simulated host
+  devices (``--xla_force_host_platform_device_count``) every island
+  timeshares the same cores, so measured wall is work-bound, not
+  device-bound.
+* ``critical_path_s`` — the device-parallel wall: the maximum standalone
+  wall time of any single island's block (measured, not asserted, by
+  running each shard's rows alone).  On a real S-device machine the
+  islands run concurrently and measured wall approaches this number.
+* ``seq_steps`` — the longest per-row while-loop trip count (the
+  device-pass metric of ``bench_kernels``): the sequential depth a shard
+  pays regardless of how many rows ride in its vmap.
+* ``scm`` — the global winner's f64 SCM (all-reduce argmin,
+  lowest-(cost, member index) tie-break).
+
+A second block pins the island-model quality knob: best SCM with
+migration rounds vs without, at a fixed population/shard budget
+(migration only ever replaces worst rows, so it is provably
+improves-or-equals).
+
+``benchmarks.run`` serializes these rows to ``BENCH_shard_scaling.json``
+at the repo root so the perf trajectory is tracked across PRs.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+
+def _timed(fn, reps: int) -> float:
+    fn()  # warm: compile + first dispatch out of the timing
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        fn()
+    return (time.perf_counter() - t0) / max(1, reps)
+
+
+def run(reps: int = 2, quick: bool = False, shards: int | None = None) -> list[dict]:
+    import jax
+
+    from repro.core.generators import random_flow
+    from repro.optim.batched import seed_population
+    from repro.optim.sharded import resolve_shards, sharded_refine
+
+    ndev = jax.device_count()
+    smax = min(int(shards), ndev) if shards else min(8, ndev)
+    f = random_flow(16, 0.4, rng=3)
+    base = 64 if quick else 128
+    cells: list[tuple[int, int]] = [(base, 1)]
+    if smax > 1:
+        cells += [(base * smax, 1), (base * smax, smax)]
+        if not quick:
+            cells.append((max(10240, base * smax), smax))
+    rows: list[dict] = []
+    seeded: dict[int, np.ndarray] = {}
+
+    def pop_rows(p: int) -> np.ndarray:
+        if p not in seeded:
+            seeded[p] = np.asarray(seed_population(f, p, 0), dtype=np.int32)
+        return seeded[p]
+
+    base_wall = None
+    for pop, S in cells:
+        S = resolve_shards(S, pop)
+        arr = pop_rows(pop)
+        refined, costs, steps, winner = sharded_refine(
+            f, arr, shards=S, migrations=0
+        )
+        wall = _timed(
+            lambda: sharded_refine(f, arr, shards=S, migrations=0), reps
+        )
+        if S > 1:
+            # device-parallel critical path: each island's block alone
+            L = pop // S
+            per_shard = [
+                _timed(
+                    lambda b=b: sharded_refine(
+                        f, arr[b * L : (b + 1) * L], shards=1, migrations=0
+                    ),
+                    reps,
+                )
+                for b in range(S)
+            ]
+            critical = max(per_shard)
+        else:
+            critical = wall
+        if S == 1 and pop == base:
+            base_wall = wall
+        rows.append(
+            {
+                "bench": "shard_scaling",
+                "case": "scaling",
+                "population": pop,
+                "shards": S,
+                "migrations": 0,
+                "wall_s": round(wall, 4),
+                "critical_path_s": round(critical, 4),
+                "wall_vs_base": round(wall / base_wall, 2) if base_wall else 1.0,
+                "critical_vs_base": (
+                    round(critical / base_wall, 2) if base_wall else 1.0
+                ),
+                "seq_steps": int(steps.max()),
+                "total_steps": int(steps.sum()),
+                "scm": round(float(costs[winner]), 6),
+                "devices": ndev,
+                "note": f"n={f.n}_winner={winner}",
+            }
+        )
+
+    # island-model quality: migration rounds at a fixed budget
+    if smax > 1:
+        pop = base * smax
+        arr = pop_rows(pop)
+        for mig in (0, 2):
+            t0 = time.perf_counter()
+            refined, costs, steps, winner = sharded_refine(
+                f, arr, shards=smax, migrations=mig
+            )
+            rows.append(
+                {
+                    "bench": "shard_scaling",
+                    "case": "migration",
+                    "population": pop,
+                    "shards": smax,
+                    "migrations": mig,
+                    "wall_s": round(time.perf_counter() - t0, 4),
+                    "critical_path_s": "",
+                    "wall_vs_base": "",
+                    "critical_vs_base": "",
+                    "seq_steps": int(steps.max()),
+                    "total_steps": int(steps.sum()),
+                    "scm": round(float(costs[winner]), 6),
+                    "devices": ndev,
+                    "note": f"n={f.n}_winner={winner}",
+                }
+            )
+    return rows

@@ -4,18 +4,30 @@ automatically).
 
   PYTHONPATH=src python -m benchmarks.run [--only fig10,table3] [--reps N]
   PYTHONPATH=src python -m benchmarks.run --quick   # CI smoke subset
+  PYTHONPATH=src python -m benchmarks.run --only shard_scaling --shards 8
+  PYTHONPATH=src python -m benchmarks.run --quick --profile
 
 Prints CSV blocks per benchmark and writes benchmarks/results/*.csv.
+
+``--shards N`` (with N > 1) simulates N host devices for the mesh-sharded
+benchmarks by setting ``--xla_force_host_platform_device_count`` BEFORE
+jax initializes, and forwards N to benchmarks that accept a ``shards``
+parameter.  ``--profile`` wraps each benchmark in a JAX profiler trace
+(``benchmarks/results/profile/<bench>/``, open with TensorBoard or
+Perfetto) so speedups are measured from the device timeline, not
+asserted.  The ``shard_scaling`` rows are additionally serialized to
+``BENCH_shard_scaling.json`` at the repo root to track the scaling
+trajectory across PRs.
 """
 from __future__ import annotations
 
 import argparse
 import importlib
 import inspect
+import json
 import os
+import sys
 import time
-
-from .common import rows_to_csv
 
 BENCHES = [
     "optimizers",  # repro.optim registry sweep (auto-extends)
@@ -29,9 +41,28 @@ BENCHES = [
     "pipeline",    # executable SCM-vs-wall-clock validation
     "kernels",     # kernel-level SCM validation
     "service",     # flow-optimization service: cache + batched dispatch
+    "shard_scaling",  # mesh-sharded island-model population search
 ]
 
 QUICK_BENCHES = ["optimizers", "case_study", "service"]  # CI smoke subset
+
+SHARD_SCALING_JSON = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    "BENCH_shard_scaling.json",
+)
+
+
+def _bootstrap_devices(shards: int) -> None:
+    """Simulate ``shards`` host devices.  Must run before jax initializes;
+    if jax is already imported the flag cannot take effect and the sharded
+    benchmarks fall back to however many devices exist."""
+    if shards <= 1 or "jax" in sys.modules:
+        return
+    flags = os.environ.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" not in flags:
+        os.environ["XLA_FLAGS"] = (
+            flags + f" --xla_force_host_platform_device_count={shards}"
+        ).strip()
 
 
 def main(argv=None) -> int:
@@ -42,7 +73,17 @@ def main(argv=None) -> int:
                     help="override repetitions (smaller = faster)")
     ap.add_argument("--quick", action="store_true",
                     help="CI smoke run: cheap subset, single repetition")
+    ap.add_argument("--shards", type=int, default=None,
+                    help="simulate N host devices and forward N to "
+                    "shard-aware benchmarks (set before jax initializes)")
+    ap.add_argument("--profile", action="store_true",
+                    help="emit a JAX profiler trace per benchmark under "
+                    "benchmarks/results/profile/<bench>/")
     args = ap.parse_args(argv)
+    if args.shards:
+        _bootstrap_devices(args.shards)
+    from .common import rows_to_csv
+
     if args.only:
         only = args.only.split(",")
     else:
@@ -58,11 +99,23 @@ def main(argv=None) -> int:
             continue
         mod = importlib.import_module(f".bench_{name}", __package__)
         t0 = time.time()
+        params = inspect.signature(mod.run).parameters
         kw = {"reps": args.reps} if args.reps else {}
-        if args.quick and "quick" in inspect.signature(mod.run).parameters:
+        if args.quick and "quick" in params:
             kw["quick"] = True
+        if args.shards and "shards" in params:
+            kw["shards"] = args.shards
         try:
-            rows = mod.run(**kw)
+            if args.profile:
+                import jax
+
+                tracedir = os.path.join(outdir, "profile", name)
+                os.makedirs(tracedir, exist_ok=True)
+                with jax.profiler.trace(tracedir):
+                    rows = mod.run(**kw)
+                print(f"# profiler trace -> {tracedir}")
+            else:
+                rows = mod.run(**kw)
         except Exception:  # noqa: BLE001
             import traceback
 
@@ -73,10 +126,37 @@ def main(argv=None) -> int:
         path = os.path.join(outdir, f"{name}.csv")
         with open(path, "w") as f:
             f.write(csv + "\n")
+        if name == "shard_scaling":
+            _write_shard_scaling_json(rows)
+            print(f"# shard scaling json -> {SHARD_SCALING_JSON}")
         print(f"# ===== {name} ({time.time()-t0:.1f}s) -> {path}")
         print(csv)
         print()
     return 1 if failures else 0
+
+
+def _write_shard_scaling_json(rows: list) -> None:
+    """Machine-readable shard-scaling record, tracked across PRs."""
+    import jax
+
+    payload = {
+        "bench": "shard_scaling",
+        "schema": (
+            "population x shards -> wall_s (measured on this host), "
+            "critical_path_s (max standalone per-shard wall = device-"
+            "parallel wall), seq_steps/total_steps (device passes), "
+            "scm (global winner, f64)"
+        ),
+        "host": {
+            "devices": jax.device_count(),
+            "platform": jax.devices()[0].platform,
+            "cpu_count": os.cpu_count(),
+        },
+        "rows": rows,
+    }
+    with open(SHARD_SCALING_JSON, "w") as f:
+        json.dump(payload, f, indent=2)
+        f.write("\n")
 
 
 if __name__ == "__main__":

@@ -10,7 +10,12 @@ from __future__ import annotations
 
 import jax
 
-__all__ = ["make_production_mesh", "make_host_mesh", "make_abstract_mesh"]
+__all__ = [
+    "make_production_mesh",
+    "make_host_mesh",
+    "make_abstract_mesh",
+    "make_population_mesh",
+]
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -22,6 +27,33 @@ def make_production_mesh(*, multi_pod: bool = False):
 def make_host_mesh():
     """Degenerate 1x1 mesh for CPU tests/examples (same axis names)."""
     return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def make_population_mesh(shards: int | None = None):
+    """1-D mesh over the population axis (``"pop"``) of the sharded
+    island-model plan searches (``optim.sharded``).
+
+    ``shards=None`` spans every local device; an explicit count takes the
+    first ``shards`` devices (CI simulates 8 with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8``).  Uses
+    ``jax.make_mesh`` where available (>= 0.4.35) and falls back to direct
+    ``Mesh`` construction on older releases — the compat twin of
+    ``make_abstract_mesh`` below.
+    """
+    n = jax.device_count() if shards is None else int(shards)
+    if n < 1:
+        raise ValueError(f"shards must be >= 1; got {n}")
+    if n > jax.device_count():
+        raise ValueError(
+            f"requested {n} mesh devices but only {jax.device_count()} "
+            "are available"
+        )
+    if hasattr(jax, "make_mesh"):
+        return jax.make_mesh((n,), ("pop",), devices=jax.devices()[:n])
+    import numpy as np
+    from jax.sharding import Mesh
+
+    return Mesh(np.asarray(jax.devices()[:n]), ("pop",))
 
 
 def make_abstract_mesh(shape: tuple[int, ...], axes: tuple[str, ...]):

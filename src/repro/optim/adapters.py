@@ -8,7 +8,7 @@ from __future__ import annotations
 
 from ..core import exact, heuristics, rank
 from ..core.flow import Flow
-from . import batched, mimo_batch, parallel_batch
+from . import batched, mimo_batch, parallel_batch, sharded
 from .api import (
     APPROXIMATE,
     BATCHABLE,
@@ -133,6 +133,30 @@ register(
     tags={APPROXIMATE, HANDLES_CONSTRAINTS, BATCHABLE, STOCHASTIC},
     doc="Registry-seeded portfolio + mutate-and-select generations with "
     "device-batched SCM evaluation.",
+)
+
+# --------------------------- mesh-sharded island-model searches (beyond-paper)
+# The population axis is sharded across a 1-D device mesh; each shard runs
+# the unchanged local search with periodic elite ring migration
+# (lax.ppermute) and an all-reduce argmin winner with deterministic
+# lowest-(cost, member index) tie-breaking.  shards=None adapts to the
+# local device count; shards=1 is bit-for-bit the single-device entry.
+register(
+    "sharded-ro3",
+    sharded.sharded_population_hill_climb,
+    tags={APPROXIMATE, HANDLES_CONSTRAINTS, BATCHABLE},
+    doc="Island-model batched RO-III across a device mesh: per-shard "
+    "vmapped refinement, elite ring migration with island-local random "
+    "block-move perturbation, all-reduce argmin winner.  shards=1 "
+    "reproduces batched-ro3 bit-for-bit; any shard count is never worse.",
+)
+register(
+    "sharded-portfolio",
+    sharded.sharded_portfolio,
+    tags={APPROXIMATE, HANDLES_CONSTRAINTS, BATCHABLE, STOCHASTIC},
+    doc="Island-model portfolio across a device mesh: registry-seeded "
+    "islands evolve device-side (RO-III move-set mutation, stable-rank "
+    "elitism) with elite ring migration; never worse than any seed.",
 )
 
 # ----------------------------------------- MIMO flows, §5 (device-batched)

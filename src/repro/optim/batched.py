@@ -47,6 +47,7 @@ __all__ = [
     "block_move_delta_batch",
     "block_move_pass_batch",
     "pred_matrix",
+    "argmin_lowest_index",
     "hill_climb",
     "seed_population",
     "population_hill_climb",
@@ -55,6 +56,24 @@ __all__ = [
 ]
 
 _IMPROVE_EPS = -1e-12  # same strict-improvement threshold as core.rank
+
+
+def argmin_lowest_index(costs) -> int:
+    """Winner selection for population searches: the member with minimum
+    cost, ties broken by the LOWEST member index.
+
+    This is the tie-breaking contract every population path shares — the
+    single-device host argmin here, the service batcher's per-request
+    argmin, and the sharded searches' device-side all-reduce argmin
+    (``optim.sharded._global_argmin``) all pick the same member, so a
+    plan served for a tied population is reproducible across paths and
+    shard counts.  (``np.argmin``/``jnp.argmin`` return the first
+    minimum; this helper pins that behavior as API rather than accident.)
+    """
+    arr = np.asarray(costs)
+    if arr.ndim != 1 or arr.size == 0:
+        raise ValueError(f"costs must be a non-empty vector; got {arr.shape}")
+    return int(np.argmin(arr))
 
 
 @jax.jit
@@ -366,7 +385,7 @@ def population_hill_climb(
     refined, costs = hill_climb(
         flow, np.asarray(rows), k=k, max_rounds=max_rounds, kernel=kernel
     )
-    best = int(np.argmin(costs))
+    best = argmin_lowest_index(costs)
     order = [int(v) for v in refined[best]]
     assert flow.is_valid_order(order)
     return order, scm(flow, order)
@@ -480,7 +499,9 @@ def portfolio_search(
     for _ in range(generations):
         arr = jnp.asarray(np.array(pop, dtype=np.int32))
         costs = np.asarray(scm_batch(cost_d, sel_d, arr))
-        idx = np.argsort(costs)
+        # stable: members tying on cost rank by lowest index, so elite
+        # selection (and hence the whole run) is deterministic under ties
+        idx = np.argsort(costs, kind="stable")
         # device eval is f32; re-score the head of the ranking in f64 so the
         # returned plan is never worse than its seeds by rounding alone.
         for i in idx[: max(4, elites // 4)]:
@@ -496,7 +517,7 @@ def portfolio_search(
         pop = nxt
     if refine_k > 0:
         refined, costs = hill_climb(flow, np.asarray(pop), k=refine_k)
-        i = int(np.argmin(costs))
+        i = argmin_lowest_index(costs)
         if costs[i] < best_cost:
             cand = [int(v) for v in refined[i]]
             best_cost, best_order = scm(flow, cand), cand

@@ -443,7 +443,9 @@ def batched_optimize_mimo(
                 if not active[b] or cands[b] is None:
                     continue
                 flat = scores[b].reshape(-1)
-                order_idx = np.argsort(flat)
+                # stable: tied candidate scores keep enumeration order, so
+                # the picked move is deterministic across platforms
+                order_idx = np.argsort(flat, kind="stable")
                 picked = None
                 scale = max(1.0, abs(base[b]))
                 for fi in order_idx:

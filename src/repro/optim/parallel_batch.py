@@ -48,7 +48,7 @@ from ..core.parallel import (
     run_cuts,
     segments_to_plan,
 )
-from .batched import _mutate, _seed_plans, pred_matrix
+from .batched import _mutate, _seed_plans, argmin_lowest_index, pred_matrix
 
 __all__ = [
     "scm_parallel_batch",
@@ -328,7 +328,7 @@ def _best_segmented(
     orders = np.asarray([o for o, _ in rows], dtype=np.int32)
     cuts = np.asarray([c for _, c in rows], dtype=bool)
     out_cuts, out_scm = cut_search(flow, orders, cuts, mc=mc)
-    i = int(np.argmin(out_scm))
+    i = argmin_lowest_index(out_scm)
     order = [int(v) for v in orders[i]]
     cut = [int(v) for v in out_cuts[i]]
     assert cuts_feasible(flow, order, cut)
@@ -371,7 +371,7 @@ def batched_pgreedy(
     plans = [pgreedy1(flow, mc=mc)[0], pgreedy2(flow, mc=mc)[0]]
     plans += [parallelize(flow, o) for o in orders[:4]]
     costs = scm_parallel_population(flow, plans, mc=mc)
-    j = int(np.argmin(costs))
+    j = argmin_lowest_index(costs)
     if costs[j] < best:
         plan = plans[j]
         best = scm_parallel(plan, mc=mc)  # exact f64 host re-score
@@ -418,7 +418,7 @@ def parallel_portfolio(
         arr_o = np.asarray([o for o, _ in rows], dtype=np.int32)
         arr_c = np.asarray([c for _, c in rows], dtype=bool)
         out_cuts, out_scm = cut_search(flow, arr_o, arr_c, mc=mc)
-        idx = np.argsort(out_scm)
+        idx = np.argsort(out_scm, kind="stable")  # ties rank by lowest index
         for i in idx[:4]:  # exact f64 re-score of the head of the ranking
             if not np.isfinite(out_scm[i]):
                 continue

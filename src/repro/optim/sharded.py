@@ -1,0 +1,507 @@
+"""Mesh-sharded island-model population search (beyond-paper; EXPERIMENTS.md
+§Perf sharded).
+
+Every batched search in this package vmaps its population over ONE device,
+so population size — the lever the paper's approximate algorithms use to
+close the gap to optimal (§4-§6) — is capped by a single accelerator.  This
+module shards the *population axis* across a 1-D device mesh (axis
+``"pop"``, ``launch.mesh.make_population_mesh``) with the repo's
+``shard_map`` compat wrapper (``models.layers``):
+
+* each shard ("island") runs the unchanged local search — the vmapped
+  RO-III state machine of ``optim.batched`` or the fused Pallas sweep of
+  ``kernels.block_move`` (``kernel=True``) — on its contiguous block of
+  population rows;
+* between refinement rounds, each island's elite plans migrate to the next
+  island on a ring (``jax.lax.ppermute``), are perturbed by island-specific
+  random block moves (per-shard PRNG keys split from the run seed), and
+  replace the receiving island's worst rows before re-refinement.  The
+  perturbation uses RO-III's own move set with the same precedence
+  rectangle test, so migrants are always valid plans; because only the
+  worst rows are ever replaced, the global best cost after migration is
+  provably <= the no-migration best — migration can only help;
+* the winner is picked by an all-reduce argmin (``jax.lax.all_gather`` of
+  each island's champion) with deterministic tie-breaking: lowest cost,
+  then lowest *global member index* — bit-identical to what the
+  single-device path's host argmin picks (``batched.argmin_lowest_index``).
+
+``shards=1`` reproduces ``batched.population_hill_climb`` bit-for-bit from
+the same seed (identical seeding, identical per-row refinement, identical
+winner selection; a ring of one island makes migration a no-op).  Because
+per-row refinement is island-independent, the no-migration sharded result
+equals the single-device result at *any* shard count, so ``sharded-ro3``
+is never worse than ``batched-ro3``.
+"""
+from __future__ import annotations
+
+import functools
+import random
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import enable_x64
+from jax.sharding import PartitionSpec as P
+
+from ..core.cost import scm
+from ..core.flow import Flow
+from ..launch.mesh import make_population_mesh
+from ..models.layers import shard_map
+from .batched import (
+    _block_move_pass_row,
+    _seed_plans,
+    argmin_lowest_index,
+    pred_matrix,
+    scm_batch,
+    seed_population,
+)
+
+__all__ = [
+    "resolve_shards",
+    "random_block_moves",
+    "sharded_refine",
+    "sharded_population_hill_climb",
+    "sharded_portfolio",
+]
+
+POP_AXIS = "pop"
+
+
+def resolve_shards(shards: int | None, population: int) -> int:
+    """Effective shard count: ``None`` uses every local device the
+    population divides across; an explicit count must be satisfiable."""
+    ndev = jax.device_count()
+    if shards is None:
+        s = min(ndev, population)
+        while population % s:  # largest device count the population divides
+            s -= 1
+        return max(1, s)
+    s = int(shards)
+    if s < 1:
+        raise ValueError(f"shards must be >= 1; got {s}")
+    if s > ndev:
+        raise ValueError(
+            f"shards={s} exceeds the {ndev} available device(s); "
+            "set XLA_FLAGS=--xla_force_host_platform_device_count to simulate"
+        )
+    if population % s:
+        raise ValueError(
+            f"population {population} is not divisible by shards={s}"
+        )
+    return s
+
+
+# ------------------------------------------------------- random block moves
+def _random_block_move_row(order, key, pred, k: int):
+    """One random *valid* RO-III block move of ``order`` (device-side).
+
+    Samples a block [s, e) and a uniformly random constraint-feasible
+    target among the positions the scalar mutator (``batched._mutate``)
+    could pick, using the same precedence rectangle test as the hill-climb
+    state machine; a draw with no feasible target is a no-op, so the
+    returned order is always valid.
+    """
+    n = order.shape[0]
+    idx = jnp.arange(n)
+    idx1 = jnp.arange(n + 1)
+    ks, kz, kt = jax.random.split(key, 3)
+    s = jax.random.randint(ks, (), 0, n - 1)
+    size = 1 + jax.random.randint(kz, (), 0, k)
+    size = jnp.clip(size, 1, n - 1 - s)  # leave >= 1 position to jump to
+    e = s + size
+    conflict = pred[order[:, None], order[None, :]]
+    inblock = (idx >= s) & (idx < e)
+    blockprec = jnp.any(conflict & inblock[:, None], axis=0)
+    bad = (blockprec & (idx >= e)).astype(jnp.int32)
+    badcum = jnp.concatenate([jnp.zeros(1, jnp.int32), jnp.cumsum(bad)])
+    feasible = (idx1 > e) & (badcum == badcum[e])
+    m = jnp.sum(feasible)
+    r = jax.random.randint(kt, (), 0, jnp.maximum(m, 1))
+    ranks = jnp.cumsum(feasible.astype(jnp.int32)) - 1
+    t = jnp.argmax((ranks == r) & feasible)  # the r-th feasible target
+    apply = m > 0
+    msize = t - e
+    src = jnp.where(
+        idx < s,
+        idx,
+        jnp.where(
+            idx < s + msize,
+            idx + size,
+            jnp.where(idx < t, idx - msize, idx),
+        ),
+    )
+    return jnp.where(apply, order[jnp.clip(src, 0, n - 1)], order)
+
+
+def random_block_moves(orders, key, pred, k: int = 4, moves: int = 2):
+    """``moves`` random valid block moves per row of ``orders`` (B, n).
+
+    The island model's mutation/perturbation operator: the RO-III move set
+    applied blindly (the device twin of the portfolio's host-side
+    ``_mutate``), preserving precedence feasibility by construction.
+    """
+    B, n = orders.shape
+    if B < 1 or n < 2 or moves < 1:
+        return orders
+    out = orders
+    for j in range(moves):
+        keys = jax.random.split(jax.random.fold_in(key, j), B)
+        out = jax.vmap(
+            lambda o, kk: _random_block_move_row(o, kk, pred, k)
+        )(out, keys)
+    return out
+
+
+# ----------------------------------------------------- island-model programs
+def _global_argmin(costs, L: int):
+    """All-reduce argmin over the sharded population with deterministic
+    tie-breaking: lowest cost, then lowest global member index.
+
+    ``costs`` is the (L,) local block; returns replicated (global index,
+    cost).  ``jnp.argmin`` returns the first minimum, shards are gathered
+    in ring order, and global indices increase with shard index — so the
+    composite pick is exactly ``argmin_lowest_index`` of the concatenated
+    population.
+    """
+    li = jnp.argmin(costs)
+    gi = jax.lax.axis_index(POP_AXIS) * L + li
+    all_c = jax.lax.all_gather(costs[li], POP_AXIS)  # (S,)
+    all_i = jax.lax.all_gather(gi, POP_AXIS)
+    s = jnp.argmin(all_c)
+    return all_i[s], all_c[s]
+
+
+def _island_hill_climb(
+    cost,
+    sel,
+    pred,
+    orders,
+    keys,
+    *,
+    S: int,
+    L: int,
+    k: int,
+    max_rounds: int,
+    migrations: int,
+    elites: int,
+    perturb_moves: int,
+    kernel: bool,
+):
+    """One island's program (runs under shard_map over axis ``"pop"``).
+
+    ``orders`` is the island's (L, n) block, ``keys`` its (1, 2) PRNG key.
+    Refine locally, then ``migrations`` rounds of: send refined elites
+    around the ring, perturb the arrivals with island-specific randomness,
+    replace the worst rows, re-refine *only the migrants* (resident rows
+    are already at their fixpoint and keep their bits).
+    """
+
+    def refine(o):
+        if kernel:
+            from ..kernels.ops import block_move_sweep
+
+            return block_move_sweep(cost, sel, pred, o, k=k, max_rounds=max_rounds)
+        row = functools.partial(
+            _block_move_pass_row, cost, sel, pred, k=k, max_rounds=max_rounds
+        )
+        return jax.vmap(row)(o)
+
+    refined, steps = refine(orders)
+    costs = scm_batch(cost, sel, refined)
+    total_steps = steps
+    key = keys[0]
+    perm = [(i, (i + 1) % S) for i in range(S)]
+    for r in range(migrations):
+        rank = jnp.argsort(costs)  # stable: ties keep lowest index first
+        migrants = jax.lax.ppermute(refined[rank[:elites]], POP_AXIS, perm)
+        migrants = random_block_moves(
+            migrants, jax.random.fold_in(key, r), pred, k=k, moves=perturb_moves
+        )
+        migrants, msteps = refine(migrants)
+        mcosts = scm_batch(cost, sel, migrants)
+        worst = rank[L - elites :]
+        refined = refined.at[worst].set(migrants)
+        costs = costs.at[worst].set(mcosts)
+        total_steps = total_steps.at[worst].add(msteps)
+    gi, gc = _global_argmin(costs, L)
+    return refined, costs, total_steps, gi, gc
+
+
+@functools.lru_cache(maxsize=64)
+def _hill_climb_program(
+    S: int,
+    L: int,
+    k: int,
+    max_rounds: int,
+    migrations: int,
+    elites: int,
+    perturb_moves: int,
+    kernel: bool,
+):
+    """Compiled shard_map program for a (shards, local rows) layout."""
+    mesh = make_population_mesh(S)
+    body = functools.partial(
+        _island_hill_climb,
+        S=S,
+        L=L,
+        k=k,
+        max_rounds=max_rounds,
+        migrations=migrations,
+        elites=elites,
+        perturb_moves=perturb_moves,
+        kernel=kernel,
+    )
+    return jax.jit(
+        shard_map(
+            body,
+            mesh=mesh,
+            in_specs=(P(), P(), P(), P(POP_AXIS), P(POP_AXIS)),
+            out_specs=(P(POP_AXIS), P(POP_AXIS), P(POP_AXIS), P(), P()),
+        )
+    )
+
+
+def sharded_refine(
+    flow: Flow,
+    rows,
+    *,
+    k: int = 5,
+    max_rounds: int = 50,
+    shards: int | None = None,
+    migrations: int = 2,
+    elites: int = 8,
+    perturb_moves: int = 2,
+    kernel: bool = False,
+    seed: int = 0,
+):
+    """Device-refine a population across islands; full-population outputs.
+
+    Returns ``(refined (B, n) int32, costs (B,) f64, steps (B,) int32,
+    winner global index)``.  The benchmark harness uses the per-row step
+    counts (while-loop trip counts — the device-pass metric of
+    ``bench_kernels``) for its scaling accounting; ``steps`` accumulates
+    migrant re-refinement on the rows migration replaced.
+    """
+    arr = np.asarray(rows, dtype=np.int32)
+    if arr.ndim != 2 or arr.shape[1] != flow.n:
+        raise ValueError(f"orders must be (B, {flow.n}); got {arr.shape}")
+    B = arr.shape[0]
+    S = resolve_shards(shards, B)
+    L = B // S
+    # a ring of one island migrates to itself; with fewer than 2 resident
+    # rows there is no "worst" slot distinct from the champion to replace
+    eff_migrations = migrations if (S > 1 and L >= 2) else 0
+    eff_elites = max(1, min(int(elites), L // 2)) if eff_migrations else 1
+    eff_perturb = perturb_moves if flow.n >= 2 else 0
+    program = _hill_climb_program(
+        S, L, k, max_rounds, eff_migrations, eff_elites, eff_perturb, kernel
+    )
+    with enable_x64():
+        refined, costs, steps, gi, _ = program(
+            jnp.asarray(flow.cost, dtype=jnp.float64),
+            jnp.asarray(flow.sel, dtype=jnp.float64),
+            jnp.asarray(pred_matrix(flow)),
+            jnp.asarray(arr),
+            jnp.asarray(
+                jax.random.split(jax.random.PRNGKey(seed), S)
+            ),
+        )
+        out = np.asarray(refined)
+        c = np.asarray(costs)
+        st = np.asarray(steps)
+        winner = int(gi)
+    return out, c, st, winner
+
+
+def sharded_population_hill_climb(
+    flow: Flow,
+    k: int = 5,
+    population: int = 256,
+    seed: int = 0,
+    max_rounds: int = 50,
+    shards: int | None = None,
+    migrations: int = 2,
+    elites: int = 8,
+    perturb_moves: int = 2,
+    kernel: bool = False,
+) -> tuple[list[int], float]:
+    """Island-model batched RO-III across a device mesh (``sharded-ro3``).
+
+    Seeds exactly like ``population_hill_climb`` (row 0 = RO-II, then
+    seeded random valid plans), shards the rows contiguously across
+    islands, refines + migrates, and picks the global winner by the
+    lowest-(cost, member index) all-reduce argmin.  ``shards=1`` is
+    bit-for-bit ``population_hill_climb`` from the same seed; any shard
+    count is never worse than it (migration only replaces worst rows).
+    """
+    rows = seed_population(flow, population, seed)
+    refined, _, _, winner = sharded_refine(
+        flow,
+        np.asarray(rows),
+        k=k,
+        max_rounds=max_rounds,
+        shards=shards,
+        migrations=migrations,
+        elites=elites,
+        perturb_moves=perturb_moves,
+        kernel=kernel,
+        seed=seed,
+    )
+    order = [int(v) for v in refined[winner]]
+    assert flow.is_valid_order(order)
+    return order, scm(flow, order)
+
+
+# ------------------------------------------------------- sharded portfolio
+def _island_portfolio(
+    cost,
+    sel,
+    pred,
+    pop,
+    keys,
+    *,
+    S: int,
+    L: int,
+    E: int,
+    M: int,
+    generations: int,
+    migrate_every: int,
+    perturb_moves: int,
+    refine_k: int,
+    max_rounds: int,
+):
+    """One island's mutate-and-select generations (under shard_map).
+
+    Per generation: stable-rank the local population, keep the top-E
+    elites untouched (elitism: the local champion is never lost), breed
+    the rest by perturbing elites round-robin with island-specific keys,
+    and on migration generations replace the *tail* children with the
+    ring-neighbor's top-M elites.  Ends with an optional local block-move
+    refinement and the all-reduce argmin.
+    """
+    key = keys[0]
+    costs = scm_batch(cost, sel, pop)
+    perm = [(i, (i + 1) % S) for i in range(S)]
+    for g in range(generations):
+        rank = jnp.argsort(costs)  # stable
+        elite = pop[rank[:E]]
+        parents = elite[jnp.arange(L - E) % E]
+        children = random_block_moves(
+            parents, jax.random.fold_in(key, g), pred, k=4, moves=perturb_moves
+        )
+        if S > 1 and migrate_every and g % migrate_every == 0:
+            migrants = jax.lax.ppermute(elite[:M], POP_AXIS, perm)
+            children = children.at[L - E - M :].set(migrants)
+        pop = jnp.concatenate([elite, children], axis=0)
+        costs = scm_batch(cost, sel, pop)
+    if refine_k > 0:
+        row = functools.partial(
+            _block_move_pass_row, cost, sel, pred, k=refine_k,
+            max_rounds=max_rounds,
+        )
+        pop, _ = jax.vmap(row)(pop)
+        costs = scm_batch(cost, sel, pop)
+    gi, gc = _global_argmin(costs, L)
+    return pop, costs, gi, gc
+
+
+@functools.lru_cache(maxsize=64)
+def _portfolio_program(
+    S: int,
+    L: int,
+    E: int,
+    M: int,
+    generations: int,
+    migrate_every: int,
+    perturb_moves: int,
+    refine_k: int,
+    max_rounds: int,
+):
+    mesh = make_population_mesh(S)
+    body = functools.partial(
+        _island_portfolio,
+        S=S,
+        L=L,
+        E=E,
+        M=M,
+        generations=generations,
+        migrate_every=migrate_every,
+        perturb_moves=perturb_moves,
+        refine_k=refine_k,
+        max_rounds=max_rounds,
+    )
+    return jax.jit(
+        shard_map(
+            body,
+            mesh=mesh,
+            in_specs=(P(), P(), P(), P(POP_AXIS), P(POP_AXIS)),
+            out_specs=(P(POP_AXIS), P(POP_AXIS), P(), P()),
+        )
+    )
+
+
+def sharded_portfolio(
+    flow: Flow,
+    generations: int = 8,
+    population: int = 256,
+    elites: int = 16,
+    seed: int = 0,
+    seed_names: list[str] | None = None,
+    shards: int | None = None,
+    migrate_every: int = 1,
+    perturb_moves: int = 2,
+    refine_k: int = 3,
+    max_rounds: int = 50,
+) -> tuple[list[int], float]:
+    """Island-model portfolio search across a device mesh
+    (``sharded-portfolio``).
+
+    Host-side seeding mirrors ``portfolio_search`` (one plan per registered
+    non-batched heuristic + seeded random plans, all exactly re-scored in
+    f64 so the result is never worse than any seed); the generations run
+    entirely on device — mutation is the RO-III move set via
+    ``random_block_moves`` with per-island PRNG keys, selection is a stable
+    rank, and island elites migrate on the ``ppermute`` ring every
+    ``migrate_every`` generations.  Deterministic for a given
+    ``(seed, shards)``.
+    """
+    rng = random.Random(seed)
+    from ..core.heuristics import random_plan
+
+    seeds = _seed_plans(flow, seed_names)
+    best_order: list[int] = seeds[0] if seeds else random_plan(flow, rng)
+    best_cost = np.inf
+    for o in seeds:  # exact f64 floor: never return worse than a seed
+        c = scm(flow, o)
+        if c < best_cost:
+            best_cost, best_order = c, o
+    while len(seeds) < population:
+        seeds.append(random_plan(flow, rng))
+    seeds = seeds[:population]
+
+    S = resolve_shards(shards, population)
+    L = population // S
+    E = max(1, min(int(elites), L // 2))
+    M = max(1, E // 2) if (S > 1 and migrate_every) else 0
+    eff_migrate = migrate_every if (S > 1 and L - E - M >= 0 and M) else 0
+    eff_perturb = perturb_moves if flow.n >= 2 else 0
+    program = _portfolio_program(
+        S, L, E, M if eff_migrate else 0, generations, eff_migrate,
+        eff_perturb, refine_k, max_rounds,
+    )
+    with enable_x64():
+        pop, costs, gi, _ = program(
+            jnp.asarray(flow.cost, dtype=jnp.float64),
+            jnp.asarray(flow.sel, dtype=jnp.float64),
+            jnp.asarray(pred_matrix(flow)),
+            jnp.asarray(np.asarray(seeds, dtype=np.int32)),
+            jnp.asarray(jax.random.split(jax.random.PRNGKey(seed), S)),
+        )
+        winner = int(gi)
+        cand = [int(v) for v in np.asarray(pop)[winner]]
+    assert flow.is_valid_order(cand)
+    c = scm(flow, cand)
+    if c < best_cost:
+        best_cost, best_order = c, cand
+    assert flow.is_valid_order(best_order)
+    return best_order, scm(flow, best_order)

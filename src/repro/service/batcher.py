@@ -31,6 +31,7 @@ from ..core.cost import scm
 from ..core.flow import Flow
 from ..optim import api
 from ..optim.batched import (
+    argmin_lowest_index,
     block_move_pass_batch,
     pred_matrix,
     seed_population,
@@ -132,7 +133,7 @@ def dispatch_bucket(
     out = []
     for i, f in enumerate(flows):
         block = slice(i * P, (i + 1) * P)
-        best = int(np.argmin(costs[block]))
+        best = argmin_lowest_index(costs[block])
         order = [int(v) for v in refined[block][best][: f.n]]
         assert f.is_valid_order(order)
         out.append((order, scm(f, order)))

@@ -29,6 +29,7 @@ CORE_NAMES = (
     "kbz", "ro1", "ro2", "ro3",
     "batched-ro3", "kernel-ro3", "portfolio",
     "batched-pgreedy", "parallel-portfolio", "batched-mimo",
+    "sharded-ro3", "sharded-portfolio",
 )
 
 
@@ -44,6 +45,8 @@ def test_registry_contents_and_tags():
         "batched-pgreedy",
         "parallel-portfolio",
         "batched-mimo",
+        "sharded-ro3",
+        "sharded-portfolio",
     }
     assert "dp" not in optim.list_optimizers(exclude=(optim.EXHAUSTIVE,))
     for name in names:

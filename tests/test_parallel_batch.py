@@ -180,6 +180,8 @@ def test_parallel_registry_entries_and_tags():
         "batched-pgreedy",
         "parallel-portfolio",
         "batched-mimo",
+        "sharded-ro3",
+        "sharded-portfolio",
     }
     for name in ("batched-pgreedy", "parallel-portfolio"):
         opt = optim.get_optimizer(name)

@@ -1,0 +1,350 @@
+"""Mesh-sharded island-model population search (`optim.sharded`).
+
+Single-device tests run everywhere.  Multi-device tests are named
+``test_m8_*`` and skip unless 8 devices are visible; on a single-device
+host ``test_multidevice_suite_subprocess`` re-runs them in a subprocess
+with ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (the same
+idiom as ``test_serve_sharding``), and the CI multi-device job runs them
+in-process under that flag.
+"""
+import os
+import subprocess
+import sys
+
+import jax
+import numpy as np
+import pytest
+
+from repro import optim
+from repro.core import random_flow, random_plan, ro2, ro3, scm
+from repro.core.flow import Flow
+from repro.launch.mesh import make_abstract_mesh, make_population_mesh
+from repro.optim import (
+    argmin_lowest_index,
+    population_hill_climb,
+    resolve_shards,
+    sharded_population_hill_climb,
+    sharded_portfolio,
+    sharded_refine,
+)
+from repro.optim.batched import _seed_plans, pred_matrix, seed_population
+from repro.optim.sharded import random_block_moves
+
+MULTI = jax.device_count() >= 8
+m8 = pytest.mark.skipif(
+    not MULTI,
+    reason="needs 8 devices (XLA_FLAGS=--xla_force_host_platform_device_count=8)",
+)
+
+
+def uniform_flow(n: int = 8) -> Flow:
+    """Every task identical and unconstrained: ALL orders tie on SCM, so
+    winner selection is decided purely by the tie-breaking contract."""
+    return Flow(np.ones(n), np.full(n, 0.5), ())
+
+
+# ----------------------------------------------------------------- registry
+def test_registry_has_sharded_entries():
+    names = optim.list_optimizers(tags=(optim.BATCHABLE,))
+    assert "sharded-ro3" in names and "sharded-portfolio" in names
+    assert optim.STOCHASTIC in optim.get_optimizer("sharded-portfolio").tags
+    assert optim.STOCHASTIC not in optim.get_optimizer("sharded-ro3").tags
+
+
+def test_resolve_shards_validation():
+    assert resolve_shards(1, 64) == 1
+    assert resolve_shards(None, 1) == 1
+    # None adapts to the device count but never leaves a remainder
+    s = resolve_shards(None, 30)
+    assert 30 % s == 0 and s <= jax.device_count()
+    with pytest.raises(ValueError, match="not divisible"):
+        if jax.device_count() >= 2:
+            resolve_shards(2, 31)
+        else:
+            raise ValueError("population 31 is not divisible")
+    with pytest.raises(ValueError, match="shards"):
+        resolve_shards(0, 8)
+    with pytest.raises(ValueError, match="exceeds"):
+        resolve_shards(jax.device_count() + 1, 1024)
+
+
+# -------------------------------------------------------------------- mesh
+def test_make_population_mesh_axis_construction():
+    mesh = make_population_mesh(1)
+    assert mesh.axis_names == ("pop",)
+    assert mesh.shape["pop"] == 1
+    full = make_population_mesh(None)
+    assert full.shape["pop"] == jax.device_count()
+    with pytest.raises(ValueError, match="available"):
+        make_population_mesh(jax.device_count() + 1)
+    with pytest.raises(ValueError):
+        make_population_mesh(0)
+
+
+def test_make_population_mesh_pre_0435_fallback(monkeypatch):
+    # older jax has no jax.make_mesh: the helper must build Mesh directly
+    monkeypatch.delattr(jax, "make_mesh")
+    mesh = make_population_mesh(1)
+    assert mesh.axis_names == ("pop",)
+    assert mesh.shape["pop"] == 1
+
+
+def test_make_abstract_mesh_conventions():
+    am = make_abstract_mesh((2, 4), ("data", "model"))
+    assert tuple(am.axis_names) == ("data", "model")
+    assert am.shape["data"] == 2 and am.shape["model"] == 4
+
+
+# -------------------------------------------------- tie-breaking (satellite)
+def test_argmin_lowest_index_contract():
+    assert argmin_lowest_index([3.0, 1.0, 1.0, 2.0]) == 1
+    assert argmin_lowest_index(np.zeros(5)) == 0
+    assert argmin_lowest_index([2.0]) == 0
+    with pytest.raises(ValueError):
+        argmin_lowest_index([])
+    with pytest.raises(ValueError):
+        argmin_lowest_index(np.zeros((2, 2)))
+
+
+def test_tied_population_winner_is_lowest_member_index():
+    """Regression: with every member tying on cost, the winner must be
+    member 0 (the RO-II seed row) — not whichever index argmin/argsort
+    happens to emit — on both the single-device and sharded paths."""
+    f = uniform_flow(8)
+    rows = seed_population(f, 16, 0)
+    refined, costs = optim.hill_climb(f, np.asarray(rows))
+    assert np.allclose(costs, costs[0])  # all tie by construction
+    assert argmin_lowest_index(costs) == 0
+    order_single, cost_single = population_hill_climb(f, population=16, seed=0)
+    order_sharded, cost_sharded = sharded_population_hill_climb(
+        f, population=16, seed=0, shards=1
+    )
+    assert order_single == [int(v) for v in refined[0]]
+    assert order_sharded == order_single
+    assert cost_sharded == cost_single
+    _, _, _, winner = sharded_refine(f, np.asarray(rows), shards=1)
+    assert winner == 0
+
+
+# ------------------------------------------------- shards=1 bit parity
+def test_shards1_bit_parity_with_batched_ro3():
+    """Acceptance: sharded-ro3 at shards=1 reproduces single-device
+    batched-ro3 bit-for-bit from the same seed."""
+    for n, seed in ((10, 0), (12, 3), (14, 7)):
+        f = random_flow(n, 0.4, rng=seed)
+        a_order, a_cost = population_hill_climb(f, population=64, seed=seed)
+        b_order, b_cost = sharded_population_hill_climb(
+            f, population=64, seed=seed, shards=1
+        )
+        assert b_order == a_order
+        assert b_cost == a_cost  # bit-for-bit, not approx
+
+
+def test_sharded_refine_matches_hill_climb_rows_exactly():
+    f = random_flow(12, 0.4, rng=5)
+    rows = np.asarray(seed_population(f, 32, 1), dtype=np.int32)
+    want_orders, want_costs = optim.hill_climb(f, rows)
+    got_orders, got_costs, steps, winner = sharded_refine(f, rows, shards=1)
+    np.testing.assert_array_equal(got_orders, want_orders)
+    np.testing.assert_array_equal(got_costs, want_costs)
+    assert steps.shape == (32,) and (steps > 0).all()
+    assert winner == argmin_lowest_index(want_costs)
+
+
+# ------------------------------------------------------------ perturbation
+def test_random_block_moves_preserve_validity():
+    import jax.numpy as jnp
+
+    for n, seed in ((6, 0), (12, 1), (20, 2)):
+        f = random_flow(n, 0.5, rng=seed)
+        import random as pyrandom
+
+        rng = pyrandom.Random(seed)
+        rows = np.asarray(
+            [random_plan(f, rng) for _ in range(16)], dtype=np.int32
+        )
+        out = np.asarray(
+            random_block_moves(
+                jnp.asarray(rows),
+                jax.random.PRNGKey(seed),
+                jnp.asarray(pred_matrix(f)),
+                k=4,
+                moves=3,
+            )
+        )
+        changed = 0
+        for row in out:
+            assert f.is_valid_order([int(v) for v in row])
+        changed = int((out != rows).any(axis=1).sum())
+        if n >= 12:  # on unconstrained-enough flows the operator must act
+            assert changed > 0
+
+
+def test_random_block_moves_noop_cases():
+    import jax.numpy as jnp
+
+    f = random_flow(1, 0.0, rng=0)
+    rows = jnp.zeros((4, 1), dtype=jnp.int32)
+    out = random_block_moves(
+        rows, jax.random.PRNGKey(0), jnp.asarray(pred_matrix(f))
+    )
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(rows))
+    # a fully chained flow admits no move at all
+    chain = Flow(np.ones(5), np.full(5, 0.5), tuple((i, i + 1) for i in range(4)))
+    rows = jnp.asarray(
+        np.tile(np.arange(5, dtype=np.int32), (3, 1))
+    )
+    out = random_block_moves(
+        rows, jax.random.PRNGKey(1), jnp.asarray(pred_matrix(chain)), moves=4
+    )
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(rows))
+
+
+# --------------------------------------------------------------- portfolio
+def test_sharded_portfolio_never_worse_than_seeds_single_device():
+    f = random_flow(16, 0.4, rng=4)
+    order, cost = sharded_portfolio(
+        f, generations=3, population=64, seed=0, shards=1
+    )
+    assert f.is_valid_order(order)
+    best_seed = min(scm(f, o) for o in _seed_plans(f, None))
+    assert cost <= best_seed + 1e-9
+    # deterministic for a fixed (seed, shards)
+    again = sharded_portfolio(f, generations=3, population=64, seed=0, shards=1)
+    assert again == (order, cost)
+
+
+# ----------------------------------------------------------------- service
+def test_service_serves_sharded_optimizer_by_name():
+    from repro.service.server import FlowOptimizationService
+
+    flows = [random_flow(10, 0.4, rng=i) for i in range(3)]
+    svc = FlowOptimizationService()
+    got = svc.serve(flows, optimizer="sharded-ro3", population=32)
+    ref = FlowOptimizationService()
+    want = ref.serve(flows, optimizer="batched-ro3", population=32)
+    for g, w, f in zip(got, want, flows):
+        assert f.is_valid_order(list(g.order))
+        # single-device host: sharded-ro3 resolves to shards=1, which is
+        # bit-identical to batched-ro3 — the service must serve the same plan
+        assert g.order == w.order and g.scm == w.scm
+
+
+# ----------------------------------------------------- multi-device (m8)
+@m8
+def test_m8_no_migration_equals_single_device():
+    """Island refinement is per-row: without migration, shards=8 returns
+    the identical rows, costs and winner as one device."""
+    for seed in (3, 7):
+        f = random_flow(12, 0.4, rng=seed)
+        rows = np.asarray(seed_population(f, 64, seed), dtype=np.int32)
+        want_orders, want_costs = optim.hill_climb(f, rows)
+        got_orders, got_costs, _, winner = sharded_refine(
+            f, rows, shards=8, migrations=0
+        )
+        np.testing.assert_array_equal(got_orders, want_orders)
+        np.testing.assert_array_equal(got_costs, want_costs)
+        assert winner == argmin_lowest_index(want_costs)
+
+
+@m8
+def test_m8_migration_improves_or_equals():
+    """Migration only replaces each island's worst rows, so the global
+    best cost with migration is <= without, deterministically."""
+    for seed in (1, 5):
+        f = random_flow(14, 0.5, rng=seed)
+        base = sharded_population_hill_climb(
+            f, population=64, seed=0, shards=8, migrations=0
+        )
+        for mig in (1, 3):
+            order, cost = sharded_population_hill_climb(
+                f, population=64, seed=0, shards=8, migrations=mig
+            )
+            assert f.is_valid_order(order)
+            assert cost <= base[1] + 1e-12
+
+
+@m8
+def test_m8_sharded_never_worse_than_scalar_ro3():
+    f = random_flow(12, 0.4, rng=11)
+    _, c_ro3 = ro3(f)
+    _, cost = sharded_population_hill_climb(
+        f, population=64, seed=0, shards=8, migrations=2
+    )
+    assert cost <= c_ro3 + 1e-9
+
+
+@m8
+def test_m8_tied_population_winner_agrees_across_shard_counts():
+    f = uniform_flow(12)
+    s1 = sharded_population_hill_climb(f, population=64, seed=0, shards=1)
+    s8 = sharded_population_hill_climb(
+        f, population=64, seed=0, shards=8, migrations=0
+    )
+    assert s1 == s8
+    rows = np.asarray(seed_population(f, 64, 0), dtype=np.int32)
+    _, _, _, winner = sharded_refine(f, rows, shards=8, migrations=0)
+    assert winner == 0  # global lowest member index among the all-tied rows
+
+
+@m8
+def test_m8_kernel_backend_inside_shards():
+    """The fused Pallas sweep rides unchanged inside each shard: same
+    fixpoints as the vmapped machine under the same sharding."""
+    f = random_flow(12, 0.4, rng=2)
+    rows = np.asarray(seed_population(f, 32, 0), dtype=np.int32)
+    v_orders, v_costs, _, v_win = sharded_refine(
+        f, rows, shards=8, migrations=1, kernel=False
+    )
+    k_orders, k_costs, _, k_win = sharded_refine(
+        f, rows, shards=8, migrations=1, kernel=True
+    )
+    np.testing.assert_array_equal(k_orders, v_orders)
+    np.testing.assert_array_equal(k_costs, v_costs)
+    assert k_win == v_win
+
+
+@m8
+def test_m8_sharded_portfolio_runs_and_bounds():
+    f = random_flow(14, 0.4, rng=9)
+    order, cost = sharded_portfolio(
+        f, generations=3, population=64, seed=0, shards=8
+    )
+    assert f.is_valid_order(order)
+    best_seed = min(scm(f, o) for o in _seed_plans(f, None))
+    assert cost <= best_seed + 1e-9
+
+
+@m8
+def test_m8_registry_dispatch_uses_all_devices():
+    # default shards=None spans the 8 simulated devices without erroring
+    f = random_flow(10, 0.4, rng=6)
+    r = optim.get_optimizer("sharded-ro3")(f, population=64)
+    assert f.is_valid_order(list(r.order))
+    _, c_batched = population_hill_climb(f, population=64, seed=0)
+    assert r.scm <= c_batched + 1e-12  # never worse than single-device
+
+
+# -------------------------------------------------- subprocess driver
+def test_multidevice_suite_subprocess():
+    """On single-device hosts, run every test_m8_* above under 8 simulated
+    host devices in a subprocess (same idiom as test_serve_sharding)."""
+    if MULTI:
+        pytest.skip("already running with >= 8 devices")
+    env = {
+        **os.environ,
+        "XLA_FLAGS": (
+            os.environ.get("XLA_FLAGS", "")
+            + " --xla_force_host_platform_device_count=8"
+        ).strip(),
+        "JAX_PLATFORMS": "cpu",
+    }
+    out = subprocess.run(
+        [sys.executable, "-m", "pytest", "-q", "-k", "m8", __file__],
+        env=env,
+        capture_output=True,
+        text=True,
+        timeout=1200,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    )
+    assert out.returncode == 0, (out.stdout[-3000:], out.stderr[-2000:])
