@@ -26,12 +26,10 @@ from repro.core import (
 from repro.core.parallel import pgreedy1, pgreedy2
 from repro.optim import STOCHASTIC, get_optimizer, list_optimizers
 
-# entries whose reported SCM is the execution DAG's scm_parallel, not the
-# linear SCM of the returned order — normalized_scm is comparable only
-# within one cost model, so every row carries its model explicitly
-PARALLEL_ALGOS = {"batched-pgreedy", "parallel-portfolio"}
-# entries reporting the §5 MIMO total cost (union-merge volume model)
-MIMO_ALGOS = {"batched-mimo"}
+# normalized_scm is comparable only within one cost model, so every row
+# carries its model explicitly — read off the registry entry (linear order
+# SCM, the execution DAG's scm_parallel, or the §5 union-merge MIMO cost)
+# instead of hard-coded name sets that rot as algorithms register.
 
 
 def _seed_kw(opt) -> str:
@@ -60,12 +58,21 @@ def _flows(quick: bool) -> list[tuple[str, object]]:
 
 
 def run(
-    reps: int = 3, quick: bool = False, shards: int | None = None
+    reps: int = 3,
+    quick: bool = False,
+    shards: int | None = None,
+    verify: bool = False,
 ) -> list[dict]:
     """``shards`` pins the island count for the mesh-sharded entries
     (forwarded by ``benchmarks.run --shards N``); their default adapts to
     the local device count, so on a single-device host they degrade to the
-    bit-identical shards=1 path."""
+    bit-identical shards=1 path.  ``verify`` (forwarded by
+    ``benchmarks.run --verify``) contract-checks every measured plan via
+    ``repro.analysis.verify`` and raises on any violation — measured rows
+    must correspond to real, achievable plans."""
+    if verify:
+        from repro.analysis.findings import render_text
+        from repro.analysis.verify import verify_plan
     rows = []
     for fname, f in _flows(quick):
         c0 = scm(f, random_plan(f, 0))
@@ -121,6 +128,16 @@ def run(
                 ]
             else:  # deterministic: reps only average out timing noise
                 results = [opt(f, **extra) for _ in range(reps)]
+            if verify:
+                for r in results:
+                    errs = [
+                        v for v in verify_plan(f, r) if v.severity == "error"
+                    ]
+                    if errs:
+                        raise AssertionError(
+                            f"{name} on {fname} failed verification:\n"
+                            + render_text(errs)
+                        )
             best = min(r.scm for r in results)
             rows.append(
                 {
@@ -134,11 +151,7 @@ def run(
                         float(np.mean([r.wall_time_s for r in results])) * 1e3, 2
                     ),
                     "tags": "|".join(sorted(opt.tags)),
-                    "cost_model": (
-                        "parallel"
-                        if name in PARALLEL_ALGOS
-                        else "mimo" if name in MIMO_ALGOS else "linear"
-                    ),
+                    "cost_model": opt.cost_model,
                 }
             )
     return rows

@@ -79,6 +79,10 @@ def main(argv=None) -> int:
     ap.add_argument("--profile", action="store_true",
                     help="emit a JAX profiler trace per benchmark under "
                     "benchmarks/results/profile/<bench>/")
+    ap.add_argument("--verify", action="store_true",
+                    help="forward verify=True to benchmarks that accept it: "
+                    "every measured plan is contract-checked via "
+                    "repro.analysis.verify before its row is recorded")
     args = ap.parse_args(argv)
     if args.shards:
         _bootstrap_devices(args.shards)
@@ -105,6 +109,8 @@ def main(argv=None) -> int:
             kw["quick"] = True
         if args.shards and "shards" in params:
             kw["shards"] = args.shards
+        if args.verify and "verify" in params:
+            kw["verify"] = True
         try:
             if args.profile:
                 import jax

@@ -25,6 +25,7 @@ print(f"case-study flow: {flow.n} tasks, PC density {flow.pc_fraction():.0%}")
 print(f"initial plan SCM: {scm(flow, init):.2f}\n")
 
 plans = {}
+results = {}
 for name in list_optimizers():
     opt = get_optimizer(name)
     if not opt.supports(flow):
@@ -32,8 +33,24 @@ for name in list_optimizers():
         continue
     res = opt(flow)
     plans[name] = list(res.order)
+    results[name] = res
     print(f"{name:13s}: SCM={res.scm:7.2f}  ({res.wall_time_s * 1e3:7.2f}ms)  "
           f"[{' -> '.join(flow.names[v].split()[0] for v in res.order[:5])} ...]")
+
+# ------------------------------------------------------ trust, then verify
+# every plan above is re-checked from structure alone: permutation, PC
+# order, and the reported SCM against an independent f64 recomputation
+from repro.analysis import verify_plan  # noqa: E402  (example reads top-down)
+
+violations = [
+    v
+    for name, res in results.items()
+    for v in verify_plan(flow, res)
+    if v.severity == "error"
+]
+print(f"\nrepro.analysis.verify: {len(results)} plans checked, "
+      f"{len(violations)} contract violations")
+assert not violations
 
 # ---------------------------------------------------------- execute for real
 print("\nexecuting on 300k synthetic tweets (host pipeline, compacting):")

@@ -1,0 +1,42 @@
+"""Static-analysis subsystem: effect inference, plan verification, lint.
+
+Three passes, one finding model, one CLI (``python -m repro.analysis``):
+
+* ``effects``  — infer each ``PipelineOp.fn``'s true read/write field sets
+  without executing data (``jax.eval_shape`` over a recording proxy, with
+  an AST fallback), cross-check them against the hand-declared sets, and
+  diff the minimal inferred precedence constraints against
+  ``derive_constraints``.  Under-declared effects (UNSOUND) mean a
+  reordering can silently change results; over-declared ones
+  (OVER-CONSTRAINED) forbid profitable reorders for no reason.
+* ``verify``   — ``verify_plan(flow, result)``: an independent contract
+  checker for optimizer outputs (permutation, PC order, cut feasibility,
+  MIMO legality, reported cost vs an f64 closed-form recomputation).
+* ``lint``     — AST rules over the repo source encoding bug classes we
+  have already shipped fixes for (bare population argmin, builtin
+  ``hash``, PRNG key reuse, dtype-less ``asarray`` under x64).
+
+All passes emit :class:`~repro.analysis.findings.Finding` records; the CLI
+renders them as text or JSON and exits non-zero on error-severity results.
+"""
+from __future__ import annotations
+
+from .effects import EffectReport, analyze_ops, infer_effects
+from .findings import Finding, Severity, exit_code, render_json, render_text
+from .lint import lint_paths, lint_source
+from .verify import verify_plan, verify_registry
+
+__all__ = [
+    "Finding",
+    "Severity",
+    "exit_code",
+    "render_text",
+    "render_json",
+    "EffectReport",
+    "infer_effects",
+    "analyze_ops",
+    "verify_plan",
+    "verify_registry",
+    "lint_source",
+    "lint_paths",
+]

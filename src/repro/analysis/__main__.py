@@ -1,0 +1,6 @@
+"""Entry point: ``python -m repro.analysis <lint|effects|verify> ...``."""
+import sys
+
+from .cli import main
+
+sys.exit(main())

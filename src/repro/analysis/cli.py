@@ -1,0 +1,131 @@
+"""``python -m repro.analysis`` — the CLI over all three passes.
+
+Subcommands::
+
+    lint <paths...>        AST lint rules over repo source (CI hard gate)
+    effects [--pipeline]   effect inference + declaration cross-check +
+                           PC diff over the shipped op libraries
+    verify [--flows N]     registry-wide plan verification sweep over a
+                           seeded workload_mixture
+
+Every subcommand prints structured findings (``--json`` for machine
+consumption) and exits 0 iff no error-severity finding was produced, so
+each doubles as a CI gate.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from typing import Sequence
+
+from .findings import Finding, exit_code, render_json, render_text
+
+__all__ = ["main"]
+
+
+def _emit(findings: list[Finding], as_json: bool) -> int:
+    print(render_json(findings) if as_json else render_text(findings))
+    return exit_code(findings)
+
+
+def _cmd_lint(args: argparse.Namespace) -> int:
+    from .lint import lint_paths
+
+    return _emit(lint_paths(args.paths), args.json)
+
+
+def _op_library(which: str):
+    if which == "case_study":
+        from ..pipeline.case_study import case_study_ops
+
+        return case_study_ops()
+    if which == "doc_flow":
+        from ..pipeline.loader import doc_flow_ops
+
+        return doc_flow_ops(doc_len=32)
+    raise SystemExit(f"unknown pipeline {which!r}")
+
+
+def _cmd_effects(args: argparse.Namespace) -> int:
+    from .effects import analyze_ops
+
+    findings: list[Finding] = []
+    for which in args.pipeline:
+        reports, fs = analyze_ops(_op_library(which))
+        findings.extend(fs)
+        if not args.json:
+            print(f"# {which}: {len(reports)} ops")
+            for rep in reports:
+                status = "ok" if rep.matches_declaration() else "MISMATCH"
+                print(
+                    f"  {rep.name:24s} [{rep.method:10s}] {status}: "
+                    f"reads={sorted(rep.pc_reads())} "
+                    f"writes={sorted(rep.inferred_writes)}"
+                )
+    return _emit(findings, args.json)
+
+
+def _cmd_verify(args: argparse.Namespace) -> int:
+    from ..core.generators import workload_mixture
+    from .verify import verify_registry
+
+    flows = workload_mixture(args.seed, n_requests=args.flows)
+    findings, checked = verify_registry(
+        flows,
+        optimizers=args.optimizers or None,
+        limit=args.limit,
+    )
+    if not args.json:
+        for name in sorted(checked):
+            print(f"  {name:24s} {checked[name]:5d} plan(s) verified")
+        never = sorted(n for n, c in checked.items() if c == 0)
+        if never:
+            print(f"  (never applicable on this workload: {', '.join(never)})")
+    return _emit(findings, args.json)
+
+
+def main(argv: "Sequence[str] | None" = None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="static analysis: effect inference, plan verification, "
+        "repo lint",
+    )
+    sub = parser.add_subparsers(dest="command", required=True)
+
+    p_lint = sub.add_parser("lint", help="AST lint rules over source paths")
+    p_lint.add_argument("paths", nargs="+", help="files or directories")
+    p_lint.add_argument("--json", action="store_true")
+    p_lint.set_defaults(fn=_cmd_lint)
+
+    p_eff = sub.add_parser(
+        "effects", help="effect inference + declaration cross-check"
+    )
+    p_eff.add_argument(
+        "--pipeline",
+        nargs="+",
+        choices=("case_study", "doc_flow"),
+        default=["case_study", "doc_flow"],
+    )
+    p_eff.add_argument("--json", action="store_true")
+    p_eff.set_defaults(fn=_cmd_effects)
+
+    p_ver = sub.add_parser(
+        "verify", help="registry-wide plan verification sweep"
+    )
+    p_ver.add_argument("--seed", type=int, default=0)
+    p_ver.add_argument("--flows", type=int, default=256)
+    p_ver.add_argument(
+        "--limit", type=int, default=None, help="cap flows actually checked"
+    )
+    p_ver.add_argument(
+        "--optimizers", nargs="*", default=None, help="restrict to names"
+    )
+    p_ver.add_argument("--json", action="store_true")
+    p_ver.set_defaults(fn=_cmd_verify)
+
+    args = parser.parse_args(argv)
+    return args.fn(args)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,452 @@
+"""Effect inference: true read/write sets of pipeline ops, without data.
+
+``pipeline.ops`` *declares* each op's reads/writes by hand and
+``derive_constraints`` trusts them blindly.  This pass infers the actual
+effects of ``PipelineOp.fn`` by abstract interpretation and cross-checks:
+
+* an **under-declared** effect (a field the fn reads or writes that the
+  declaration omits) is UNSOUND — the PC graph misses an edge and a legal
+  reordering can silently change results;
+* a **declared-but-unused** effect is OVER-CONSTRAINED — it materializes
+  PC edges that needlessly forbid profitable reorders.
+
+How inference works (no data is executed):
+
+1. The fn is traced with ``jax.make_jaxpr`` over a recording ``Fields``
+   proxy whose values are abstract ``ShapeDtypeStruct`` leaves.  The proxy
+   logs value accesses (``fields[k]``, ``fields.get(k)``); a full-dict
+   iteration (``items()``) flips a *reorder* flag instead of logging every
+   key.  ``"_mask"`` is executor infrastructure, not a field: the proxy
+   reports it absent and never logs it.
+2. The resulting jaxpr gives exact output->input dependency sets (Literal
+   operands contribute nothing; sub-jaxprs are handled conservatively).
+3. Reorder-pattern reduction: ops like ``sort_op`` return a full
+   replacement dict ``{k: v[perm] ...}``.  A returned field that existed
+   on input and depends on itself is a *pass-through* (permuted, not
+   written — record-set semantics); its extra dependencies are the
+   permutation drivers, i.e. genuine reads.  A returned field that is new,
+   or that is overwritten with data not derived from itself, is a genuine
+   write.
+4. A declared read ending in ``".sorted"`` that is never value-accessed is
+   an *ordering* dependency (the sort-marker convention): reported as
+   info, but kept in the read set when reconstructing PCs.
+
+Tracing is retried over a small shape ladder (1-D then 2-D fields — e.g.
+token matrices need 2-D, segment reductions need 1-D); fns that resist
+tracing entirely (data-dependent Python control flow) fall back to a
+best-effort AST scan of the closure source.
+
+``analyze_ops`` runs the cross-check over an op list and diffs the
+reconstructed minimal PC edge set against ``derive_constraints``.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import inspect
+import textwrap
+from typing import Iterable, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from ..pipeline.ops import PipelineOp, derive_constraints
+from .findings import Finding
+
+__all__ = ["EffectReport", "infer_effects", "analyze_ops"]
+
+_MASK = "_mask"  # executor plumbing, invisible to effect analysis
+_ORDERING_SUFFIX = ".sorted"  # the sort-marker pseudo-field convention
+_SHAPES: tuple[tuple[int, ...], ...] = ((8,), (8, 8))
+
+
+# ------------------------------------------------------------ recording proxy
+class _Recorder:
+    """Dict-like ``Fields`` stand-in logging how the fn touches it."""
+
+    def __init__(self, values: dict[str, jax.Array], shape: tuple[int, ...]):
+        self._values = values
+        self._shape = shape
+        self.reads: set[str] = set()
+        self.reads_all = False  # full-dict iteration => reorder pattern
+
+    def __getitem__(self, key: str) -> jax.Array:
+        if key == _MASK:
+            raise KeyError(key)
+        self.reads.add(key)
+        if key not in self._values:
+            # an access outside the declared universe: still a read; the
+            # materialized dummy becomes a trace constant
+            self._values[key] = jnp.zeros(self._shape, jnp.int32)
+        return self._values[key]
+
+    def get(self, key: str, default=None):
+        if key == _MASK or key not in self._values:
+            return default
+        self.reads.add(key)
+        return self._values[key]
+
+    def __contains__(self, key: str) -> bool:
+        return key != _MASK and key in self._values
+
+    def items(self):
+        self.reads_all = True
+        return self._values.items()
+
+    def keys(self):
+        self.reads_all = True
+        return self._values.keys()
+
+    def __iter__(self):
+        self.reads_all = True
+        return iter(self._values)
+
+    def __len__(self) -> int:
+        return len(self._values)
+
+
+# ------------------------------------------------------- jaxpr dependency walk
+def _jaxpr_deps(closed, n_in: int) -> list[set[int]]:
+    """For each jaxpr output, the set of input indices it depends on.
+
+    Forward propagation over equations; Literals and closed-over constants
+    contribute nothing; higher-order primitives (pjit/scan/cond) are
+    handled conservatively since an equation's invars already list every
+    operand its sub-jaxpr can see.
+    """
+    jaxpr = closed.jaxpr
+    dep: dict[int, set[int]] = {}
+    for i, v in enumerate(jaxpr.invars):
+        dep[id(v)] = {i}
+
+    def of(atom) -> set[int]:
+        return dep.get(id(atom), set())
+
+    for eqn in jaxpr.eqns:
+        acc: set[int] = set()
+        for a in eqn.invars:
+            acc |= of(a)
+        for o in eqn.outvars:
+            dep[id(o)] = set(acc)
+    assert len(jaxpr.outvars) >= 0 and n_in == len(jaxpr.invars)
+    return [of(o) for o in jaxpr.outvars]
+
+
+# ------------------------------------------------------------------ the trace
+@dataclasses.dataclass(frozen=True)
+class EffectReport:
+    """Inferred effects of one op, next to its declaration."""
+
+    name: str
+    declared_reads: frozenset[str]
+    declared_writes: frozenset[str]
+    inferred_reads: frozenset[str]
+    inferred_writes: frozenset[str]
+    ordering_reads: frozenset[str]  # declared ".sorted" deps, never accessed
+    returns_mask: bool
+    method: str  # "trace(8,)" | "trace(8, 8)" | "ast"
+
+    def pc_reads(self) -> frozenset[str]:
+        """Read set for PC reconstruction: value reads + ordering deps."""
+        return self.inferred_reads | self.ordering_reads
+
+    def matches_declaration(self) -> bool:
+        return (
+            self.pc_reads() == self.declared_reads
+            and self.inferred_writes == self.declared_writes
+        )
+
+
+def _trace_effects(
+    op: PipelineOp, universe: Sequence[str], shape: tuple[int, ...]
+) -> tuple[set[str], set[str], bool, set[str]]:
+    """One abstract trace; returns (reads, writes, returns_mask, extras)
+    where ``extras`` are accessed fields outside ``universe``."""
+    keys = sorted(universe)
+    rec_cell: list[_Recorder] = []
+    out_keys_cell: list[list[str]] = []
+    mask_cell: list[bool] = [False]
+
+    def traced(*arrays):
+        values = dict(zip(keys, arrays))
+        rec = _Recorder(values, shape)
+        rec_cell.append(rec)
+        delta, mask = op.fn(rec)
+        out_keys = sorted(delta)
+        out_keys_cell.append(out_keys)
+        flat = [delta[k] for k in out_keys]
+        if mask is not None:
+            mask_cell[0] = True
+            flat.append(mask)
+        return flat
+
+    avals = [jax.ShapeDtypeStruct(shape, jnp.int32) for _ in keys]
+    closed = jax.make_jaxpr(traced)(*avals)
+    rec = rec_cell[0]
+    out_keys = out_keys_cell[0]
+    returns_mask = mask_cell[0]
+
+    out_deps = _jaxpr_deps(closed, len(keys))
+    dep_names = [
+        {keys[i] for i in deps} for deps in out_deps
+    ]  # aligned with out_keys (+ trailing mask)
+    delta_deps = dict(zip(out_keys, dep_names))
+    mask_deps: set[str] = dep_names[len(out_keys)] if returns_mask else set()
+    extras = rec.reads - set(keys)
+
+    in_keys = set(keys)
+    if rec.reads_all:
+        # Reorder pattern: split the replacement dict into pass-throughs
+        # (pre-existing, self-dependent — permuted record sets) and
+        # genuine writes (fresh, or clobbered with foreign data).
+        writes = {
+            k
+            for k in out_keys
+            if k not in in_keys or k not in delta_deps[k]
+        }
+        drivers: set[str] = set()
+        for k in out_keys:
+            if k in in_keys and k in delta_deps[k]:
+                drivers |= delta_deps[k] - {k}
+        write_deps: set[str] = set()
+        for k in writes:
+            write_deps |= delta_deps[k]
+        reads = drivers | write_deps | mask_deps | extras
+    else:
+        writes = set(out_keys)
+        reads = set(rec.reads)
+        for k in out_keys:
+            reads |= delta_deps[k]
+        reads |= mask_deps
+    reads.discard(_MASK)
+    writes.discard(_MASK)
+    return reads, writes, returns_mask, extras
+
+
+# --------------------------------------------------------------- AST fallback
+def _ast_effects(op: PipelineOp) -> "tuple[set[str], set[str], bool] | None":
+    """Best-effort source scan for fns that resist abstract tracing:
+    ``fields[<const>]`` / ``.get(<const>)`` accesses are reads, returned
+    dict-literal keys are writes.  Returns None if no source is available."""
+    try:
+        src = textwrap.dedent(inspect.getsource(op.fn))
+        tree = ast.parse(src)
+    except (OSError, TypeError, SyntaxError):
+        return None
+    fndefs = [
+        n
+        for n in ast.walk(tree)
+        if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda))
+    ]
+    if not fndefs:
+        return None
+    fn = fndefs[0]
+    params = fn.args.posonlyargs + fn.args.args
+    fields_param = params[0].arg if params else "fields"
+
+    reads: set[str] = set()
+    writes: set[str] = set()
+    returns_mask = False
+
+    def const_str(node: ast.AST) -> "str | None":
+        if isinstance(node, ast.Constant) and isinstance(node.value, str):
+            return node.value
+        return None
+
+    for node in ast.walk(fn):
+        if (
+            isinstance(node, ast.Subscript)
+            and isinstance(node.value, ast.Name)
+            and node.value.id == fields_param
+        ):
+            key = const_str(node.slice)
+            if key is not None and key != _MASK:
+                reads.add(key)
+        if (
+            isinstance(node, ast.Call)
+            and isinstance(node.func, ast.Attribute)
+            and node.func.attr == "get"
+            and isinstance(node.func.value, ast.Name)
+            and node.func.value.id == fields_param
+            and node.args
+        ):
+            key = const_str(node.args[0])
+            if key is not None and key != _MASK:
+                reads.add(key)
+        if isinstance(node, ast.Return) and isinstance(node.value, ast.Tuple):
+            delta, mask = (node.value.elts + [None, None])[:2]
+            if isinstance(delta, ast.Dict):
+                for k in delta.keys:
+                    key = const_str(k) if k is not None else None
+                    if key is not None:
+                        writes.add(key)
+            if mask is not None and not (
+                isinstance(mask, ast.Constant) and mask.value is None
+            ):
+                returns_mask = True
+    return reads, writes, returns_mask
+
+
+# ------------------------------------------------------------------ public API
+def infer_effects(
+    op: PipelineOp, universe: "Iterable[str] | None" = None
+) -> EffectReport:
+    """Infer one op's effects.  ``universe`` is the set of fields that may
+    exist when the op runs (defaults to its own declaration); accesses
+    outside it are still recorded as reads."""
+    uni = set(universe) if universe is not None else set()
+    uni |= op.reads | op.writes
+    uni.discard(_MASK)
+
+    reads: set[str] = set()
+    writes: set[str] = set()
+    returns_mask = False
+    method = "ast"
+    traced = False
+    for shape in _SHAPES:
+        try:
+            reads, writes, returns_mask, _ = _trace_effects(
+                op, sorted(uni), shape
+            )
+        except Exception:  # abstract-trace failure: try the next shape
+            continue
+        method = f"trace{shape}"
+        traced = True
+        break
+    if not traced:
+        scanned = _ast_effects(op)
+        if scanned is not None:
+            reads, writes, returns_mask = scanned
+        else:  # nothing inferable: trust the declaration, flag nothing
+            reads = set(op.reads)
+            writes = set(op.writes)
+            returns_mask = op.is_filter
+            method = "declared"
+
+    ordering = {
+        r
+        for r in op.reads
+        if r.endswith(_ORDERING_SUFFIX) and r not in reads
+    }
+    return EffectReport(
+        name=op.name,
+        declared_reads=op.reads,
+        declared_writes=op.writes,
+        inferred_reads=frozenset(reads),
+        inferred_writes=frozenset(writes),
+        ordering_reads=frozenset(ordering),
+        returns_mask=returns_mask,
+        method=method,
+    )
+
+
+def _cross_check(op: PipelineOp, rep: EffectReport) -> list[Finding]:
+    out: list[Finding] = []
+
+    def add(rule: str, severity: str, message: str) -> None:
+        out.append(
+            Finding(rule=rule, severity=severity, message=message, op=op.name)
+        )
+
+    for f in sorted(rep.inferred_reads - rep.declared_reads):
+        add(
+            "effect-unsound-read",
+            "error",
+            f"UNSOUND: fn reads {f!r} but the declaration omits it — "
+            "a reordering can change results",
+        )
+    for f in sorted(rep.inferred_writes - rep.declared_writes):
+        add(
+            "effect-unsound-write",
+            "error",
+            f"UNSOUND: fn writes {f!r} but the declaration omits it — "
+            "a reordering can change results",
+        )
+    for f in sorted(rep.declared_reads - rep.inferred_reads - rep.ordering_reads):
+        add(
+            "effect-over-read",
+            "warning",
+            f"OVER-CONSTRAINED: declared read {f!r} is never used — "
+            "it creates PC edges that forbid profitable reorders",
+        )
+    for f in sorted(rep.declared_writes - rep.inferred_writes):
+        add(
+            "effect-over-write",
+            "warning",
+            f"OVER-CONSTRAINED: declared write {f!r} is never produced",
+        )
+    for f in sorted(rep.ordering_reads):
+        add(
+            "effect-ordering",
+            "info",
+            f"declared read {f!r} is an ordering dependency (sort marker), "
+            "not a value read; kept for PC derivation",
+        )
+    if rep.returns_mask and not op.is_filter:
+        add(
+            "effect-filter-flag",
+            "error",
+            "fn returns a keep-mask but is_filter=False — selectivity "
+            "estimates and mask plumbing will be wrong",
+        )
+    if op.is_filter and not rep.returns_mask and rep.method.startswith("trace"):
+        add(
+            "effect-filter-flag",
+            "warning",
+            "is_filter=True but the traced fn never returns a keep-mask",
+        )
+    return out
+
+
+def analyze_ops(
+    ops: Sequence[PipelineOp],
+) -> tuple[list[EffectReport], list[Finding]]:
+    """Infer effects for a whole op list, cross-check each declaration and
+    diff the reconstructed PC edge set against ``derive_constraints``."""
+    universe: set[str] = set()
+    for op in ops:
+        universe |= op.reads | op.writes
+    reports = [infer_effects(op, universe) for op in ops]
+
+    findings: list[Finding] = []
+    for op, rep in zip(ops, reports):
+        findings.extend(_cross_check(op, rep))
+
+    # PC diff: re-run the derivation rule over *inferred* effects and
+    # compare with the declared-effects edges the repo actually uses.
+    inferred_ops = [
+        PipelineOp(
+            name=op.name,
+            fn=op.fn,
+            reads=rep.pc_reads(),
+            writes=rep.inferred_writes,
+            est_cost=op.est_cost,
+            est_sel=op.est_sel,
+            is_filter=op.is_filter,
+        )
+        for op, rep in zip(ops, reports)
+    ]
+    declared_edges = set(derive_constraints(list(ops)))
+    inferred_edges = set(derive_constraints(inferred_ops))
+    for i, j in sorted(inferred_edges - declared_edges):
+        findings.append(
+            Finding(
+                rule="pc-missing-edge",
+                severity="error",
+                message=f"UNSOUND: data dependency {ops[i].name!r} -> "
+                f"{ops[j].name!r} is not in the declared PC graph",
+                op=f"{ops[i].name}->{ops[j].name}",
+            )
+        )
+    for i, j in sorted(declared_edges - inferred_edges):
+        findings.append(
+            Finding(
+                rule="pc-extra-edge",
+                severity="warning",
+                message=f"OVER-CONSTRAINED: declared PC edge "
+                f"{ops[i].name!r} -> {ops[j].name!r} has no data "
+                "dependency backing it",
+                op=f"{ops[i].name}->{ops[j].name}",
+            )
+        )
+    return reports, findings

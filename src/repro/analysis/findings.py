@@ -1,0 +1,85 @@
+"""The shared finding model for every analysis pass.
+
+A :class:`Finding` is one diagnostic: a rule id, a severity, a message and
+an anchor (``file:line`` for lint, flow/op names for the semantic passes).
+Severities map onto process exit codes so the CLI doubles as a CI gate:
+``error`` findings fail the build, ``warning``/``info`` do not.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Iterable
+
+__all__ = [
+    "Severity",
+    "Finding",
+    "exit_code",
+    "render_text",
+    "render_json",
+]
+
+# Ordered weakest-to-strongest; ``exit_code`` keys off the strongest present.
+SEVERITIES = ("info", "warning", "error")
+
+Severity = str  # one of SEVERITIES
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One diagnostic emitted by an analysis pass."""
+
+    rule: str
+    severity: Severity
+    message: str
+    file: str | None = None
+    line: int | None = None
+    flow: str | None = None
+    op: str | None = None
+
+    def __post_init__(self) -> None:
+        if self.severity not in SEVERITIES:
+            raise ValueError(f"unknown severity {self.severity!r}")
+
+    def anchor(self) -> str:
+        """Human-readable location prefix: file:line, flow/op, or '-'."""
+        if self.file is not None:
+            return f"{self.file}:{self.line}" if self.line else self.file
+        parts = [p for p in (self.flow, self.op) if p]
+        return "/".join(parts) if parts else "-"
+
+
+def exit_code(findings: Iterable[Finding]) -> int:
+    """0 if nothing error-severity, 1 otherwise (the CI contract)."""
+    return 1 if any(f.severity == "error" for f in findings) else 0
+
+
+def render_text(findings: Iterable[Finding]) -> str:
+    """One line per finding plus a severity tally, stable order."""
+    items = sorted(
+        findings,
+        key=lambda f: (
+            -SEVERITIES.index(f.severity),
+            f.file or "",
+            f.line or 0,
+            f.flow or "",
+            f.op or "",
+            f.rule,
+        ),
+    )
+    lines = [
+        f"{f.severity.upper():7s} {f.rule:20s} {f.anchor()}: {f.message}"
+        for f in items
+    ]
+    tally = {s: sum(1 for f in items if f.severity == s) for s in SEVERITIES}
+    lines.append(
+        f"-- {len(items)} finding(s): "
+        + ", ".join(f"{tally[s]} {s}" for s in reversed(SEVERITIES))
+    )
+    return "\n".join(lines)
+
+
+def render_json(findings: Iterable[Finding]) -> str:
+    return json.dumps(
+        [dataclasses.asdict(f) for f in findings], indent=2, sort_keys=True
+    )

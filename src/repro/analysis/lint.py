@@ -1,0 +1,324 @@
+"""Project-specific AST lint rules over the repo source.
+
+Each rule encodes a bug class this repo has already shipped a fix for, so
+the gate stops regressions rather than enforcing style:
+
+* ``bare-argmin``       — ``jnp.argmin``/``np.argmin`` without an ``axis``
+  keyword, i.e. a flattened population-winner pick.  On equal costs the
+  first minimum is device-layout-dependent unless routed through the
+  ``argmin_lowest_index`` contract (PR 6's determinism fix).  Per-row
+  ``axis=...`` reductions (move-target selection) are out of scope.
+* ``builtin-hash``      — builtin ``hash()``: salted per process by
+  PYTHONHASHSEED, so any derived value (seeds, cache keys) silently
+  differs across runs (the PR 2 fingerprint bug).
+* ``prng-key-reuse``    — a ``jax.random`` key consumed twice (by
+  ``split`` or a sampler) without re-deriving: correlated streams.
+  ``fold_in`` *derives* a new key and is not a consumer.
+* ``x64-asarray-dtype`` — ``jnp.asarray`` of float data without an
+  explicit dtype inside a ``with enable_x64():`` block: the result
+  dtype then depends on ambient x64 state, breaking f32/f64 parity
+  comparisons.
+
+Suppression: append ``# lint: allow[rule-a,rule-b]`` to the offending
+line or the line directly above it.
+"""
+from __future__ import annotations
+
+import ast
+import os
+import re
+from typing import Iterable, Iterator
+
+from .findings import Finding
+
+__all__ = ["lint_source", "lint_paths", "RULES"]
+
+RULES = (
+    "bare-argmin",
+    "builtin-hash",
+    "prng-key-reuse",
+    "x64-asarray-dtype",
+)
+
+_ALLOW_RE = re.compile(r"#\s*lint:\s*allow\[([^\]]*)\]")
+
+
+def _allowed(lines: list[str], lineno: int) -> set[str]:
+    """Rules suppressed at 1-based ``lineno`` (same line or line above)."""
+    out: set[str] = set()
+    for ln in (lineno, lineno - 1):
+        if 1 <= ln <= len(lines):
+            m = _ALLOW_RE.search(lines[ln - 1])
+            if m:
+                out |= {r.strip() for r in m.group(1).split(",") if r.strip()}
+    return out
+
+
+def _dotted(node: ast.AST) -> str | None:
+    """'jax.random.split' for an Attribute/Name chain, else None."""
+    parts: list[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def _kwarg_names(call: ast.Call) -> set[str]:
+    return {kw.arg for kw in call.keywords if kw.arg is not None}
+
+
+# --------------------------------------------------------------- bare-argmin
+def _check_bare_argmin(tree: ast.AST) -> Iterator[tuple[int, str]]:
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        path = _dotted(node.func)
+        if path is None or not path.endswith(".argmin"):
+            continue
+        root = path.split(".", 1)[0]
+        if root not in ("jnp", "np", "jax", "numpy"):
+            continue
+        if "axis" in _kwarg_names(node):
+            continue  # per-row reduction, not a flattened winner pick
+        yield (
+            node.lineno,
+            f"bare `{path}` winner pick — on ties the first minimum is not "
+            "a contract; route through `argmin_lowest_index`",
+        )
+
+
+# -------------------------------------------------------------- builtin-hash
+def _check_builtin_hash(tree: ast.AST) -> Iterator[tuple[int, str]]:
+    for node in ast.walk(tree):
+        if (
+            isinstance(node, ast.Call)
+            and isinstance(node.func, ast.Name)
+            and node.func.id == "hash"
+        ):
+            yield (
+                node.lineno,
+                "builtin `hash()` is salted by PYTHONHASHSEED and differs "
+                "across processes; use hashlib (e.g. blake2b) instead",
+            )
+
+
+# ----------------------------------------------------------- prng-key-reuse
+# Consumers invalidate the key they are given; `fold_in` derives a fresh
+# key from (key, data) without consuming it, so loops like
+#   for j in ...: keys = jax.random.split(jax.random.fold_in(key, j), B)
+# are sanctioned.
+_PRNG_CONSUMERS = {
+    "split",
+    "bits",
+    "uniform",
+    "normal",
+    "randint",
+    "choice",
+    "permutation",
+    "shuffle",
+    "bernoulli",
+    "categorical",
+    "gumbel",
+    "exponential",
+    "gamma",
+    "beta",
+    "truncated_normal",
+}
+
+
+def _prng_consumer_call(node: ast.Call) -> bool:
+    path = _dotted(node.func)
+    if path is None:
+        return False
+    # Only full `jax.random.X` chains: a bare `random.randint` is stdlib.
+    if not path.startswith("jax.random."):
+        return False
+    return path.rsplit(".", 1)[1] in _PRNG_CONSUMERS
+
+
+def _check_prng_reuse(tree: ast.AST) -> Iterator[tuple[int, str]]:
+    """Flag a Name passed as a key to two jax.random consumers with no
+    reassignment in between, per function scope."""
+
+    for fn in ast.walk(tree):
+        if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        consumed: dict[str, int] = {}  # name -> lineno of first consumption
+        findings: list[tuple[int, str]] = []
+
+        def clear(target: ast.AST) -> None:
+            for n in ast.walk(target):
+                if isinstance(n, ast.Name):
+                    consumed.pop(n.id, None)
+
+        def visit(node: ast.AST) -> None:
+            # Assignments evaluate the value first, then rebind targets —
+            # ast field order is targets-first, so handle them specially.
+            if isinstance(node, ast.Assign):
+                visit(node.value)
+                for t in node.targets:
+                    clear(t)
+                return
+            if isinstance(node, (ast.AugAssign, ast.AnnAssign)):
+                if getattr(node, "value", None) is not None:
+                    visit(node.value)
+                clear(node.target)
+                return
+            if isinstance(node, ast.For):
+                visit(node.iter)
+                clear(node.target)
+                for stmt in node.body + node.orelse:
+                    visit(stmt)
+                return
+            if isinstance(node, ast.Call) and _prng_consumer_call(node):
+                # Visit argument subtrees first (inner calls happen first).
+                for arg in node.args:
+                    visit(arg)
+                for kw in node.keywords:
+                    visit(kw.value)
+                key = node.args[0] if node.args else None
+                for kw in node.keywords:
+                    if kw.arg == "key":
+                        key = kw.value
+                if isinstance(key, ast.Name):  # subscripted keys not tracked
+                    prev = consumed.get(key.id)
+                    if prev is not None:
+                        findings.append(
+                            (
+                                node.lineno,
+                                f"PRNG key `{key.id}` already consumed at "
+                                f"line {prev}; split or fold_in before "
+                                "reusing it",
+                            )
+                        )
+                    else:
+                        consumed[key.id] = node.lineno
+                return
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                return  # nested scopes handled by their own walk
+            for child in ast.iter_child_nodes(node):
+                visit(child)
+
+        for stmt in fn.body:
+            visit(stmt)
+        yield from findings
+
+
+# ------------------------------------------------------- x64-asarray-dtype
+def _float_literal(node: ast.AST) -> bool:
+    if isinstance(node, ast.Constant):
+        return isinstance(node.value, float)
+    if isinstance(node, (ast.List, ast.Tuple)):
+        return any(_float_literal(e) for e in node.elts)
+    if isinstance(node, ast.UnaryOp):
+        return _float_literal(node.operand)
+    return False
+
+
+def _provably_float(node: ast.AST) -> bool:
+    """Conservative: flag only data we can see is float (precision over
+    recall, so the repo stays clean at HEAD without pragmas)."""
+    if isinstance(node, ast.Attribute) and node.attr in ("cost", "sel"):
+        return True  # Flow.cost / Flow.sel are float arrays by contract
+    if _float_literal(node):
+        return True
+    if isinstance(node, ast.Call):
+        path = _dotted(node.func)
+        if path in ("np.asarray", "numpy.asarray") and node.args:
+            return _provably_float(node.args[0])
+    return False
+
+
+def _check_x64_asarray(tree: ast.AST) -> Iterator[tuple[int, str]]:
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.With):
+            continue
+        in_x64 = any(
+            isinstance(item.context_expr, ast.Call)
+            and (_dotted(item.context_expr.func) or "").endswith("enable_x64")
+            for item in node.items
+        )
+        if not in_x64:
+            continue
+        for inner in ast.walk(node):
+            if not isinstance(inner, ast.Call):
+                continue
+            path = _dotted(inner.func)
+            if path not in ("jnp.asarray", "jax.numpy.asarray"):
+                continue
+            if "dtype" in _kwarg_names(inner):
+                continue
+            if inner.args and _provably_float(inner.args[0]):
+                yield (
+                    inner.lineno,
+                    f"`{path}` of float data without dtype inside "
+                    "enable_x64(): result precision depends on ambient x64 "
+                    "state; pass dtype= explicitly",
+                )
+
+
+_CHECKS = {
+    "bare-argmin": _check_bare_argmin,
+    "builtin-hash": _check_builtin_hash,
+    "prng-key-reuse": _check_prng_reuse,
+    "x64-asarray-dtype": _check_x64_asarray,
+}
+
+
+def lint_source(source: str, filename: str = "<string>") -> list[Finding]:
+    """Run every rule over one source string."""
+    try:
+        tree = ast.parse(source, filename=filename)
+    except SyntaxError as exc:
+        return [
+            Finding(
+                rule="syntax-error",
+                severity="error",
+                message=str(exc),
+                file=filename,
+                line=exc.lineno,
+            )
+        ]
+    lines = source.splitlines()
+    out: list[Finding] = []
+    for rule, check in _CHECKS.items():
+        for lineno, message in check(tree):
+            if rule in _allowed(lines, lineno):
+                continue
+            out.append(
+                Finding(
+                    rule=rule,
+                    severity="error",
+                    message=message,
+                    file=filename,
+                    line=lineno,
+                )
+            )
+    out.sort(key=lambda f: (f.file or "", f.line or 0, f.rule))
+    return out
+
+
+def _iter_py_files(paths: Iterable[str]) -> Iterator[str]:
+    for path in paths:
+        if os.path.isdir(path):
+            for root, dirs, files in os.walk(path):
+                dirs[:] = sorted(
+                    d for d in dirs if d not in ("__pycache__", ".git")
+                )
+                for name in sorted(files):
+                    if name.endswith(".py"):
+                        yield os.path.join(root, name)
+        elif path.endswith(".py"):
+            yield path
+
+
+def lint_paths(paths: Iterable[str]) -> list[Finding]:
+    """Run every rule over all ``.py`` files under ``paths``."""
+    out: list[Finding] = []
+    for fname in _iter_py_files(paths):
+        with open(fname, "r", encoding="utf-8") as fh:
+            out.extend(lint_source(fh.read(), filename=fname))
+    return out

@@ -1,0 +1,413 @@
+"""Independent contract checking of optimizer outputs.
+
+``verify_plan`` re-derives everything a :class:`~repro.optim.api.PlanResult`
+claims, from scratch and in float64 numpy — deliberately *not* through
+``repro.core.cost`` — so a bug in the shared cost code cannot hide itself:
+
+1. the order is a permutation of ``range(n)``;
+2. the order respects the flow's precedence constraints (placed-bitmask
+   scan over ``Flow.pred_mask``);
+3. plan structure is legal for its cost model — parallel cut vectors pass
+   ``cuts_feasible`` and decode to a valid execution DAG, ``"dag"`` parent
+   sets are acyclic with the order a linear extension, MIMO states keep
+   per-segment orders valid, the segment DAG acyclic and the provenance
+   tag *set* conserved;
+4. the reported cost matches a closed-form recomputation under the entry's
+   cost model within ``tol`` (combined abs/rel, default 1e-9).
+
+Plans without structural metadata (e.g. cache-served results) degrade
+gracefully: permutation/PC always run; the parallel/MIMO cost check emits
+an info-severity "skipped" finding instead of guessing.
+
+``verify_registry`` sweeps every registered optimizer over a set of flows
+and is the CI/benchmark gate built on top.
+"""
+from __future__ import annotations
+
+from typing import Any, Iterable, Mapping, Sequence
+
+import numpy as np
+
+from ..core.flow import Flow
+from ..core.mimo import MIMOFlow, flow_tags
+from ..core.parallel import cuts_feasible, segments_to_plan
+from ..optim import api
+from .findings import Finding
+
+__all__ = ["verify_plan", "verify_registry"]
+
+_TOL = 1e-9
+
+
+def _close(a: float, b: float, tol: float) -> bool:
+    return abs(a - b) <= tol * max(1.0, abs(a), abs(b))
+
+
+# ----------------------------------------------------- independent cost math
+def _linear_scm(cost: np.ndarray, sel: np.ndarray, order: Sequence[int]) -> float:
+    """dot(cost[order], exclusive cumprod of sel[order]) in f64."""
+    if not len(order):  # a drained MIMO segment costs nothing
+        return 0.0
+    c = np.asarray(cost, dtype=np.float64)[list(order)]
+    s = np.asarray(sel, dtype=np.float64)[list(order)]
+    pre = np.concatenate(([1.0], np.cumprod(s)[:-1]))
+    return float(np.dot(c, pre))
+
+
+def _dag_scm(flow: Flow, parents: Sequence[set[int]], mc: float) -> float | None:
+    """SCM of an execution DAG from explicit parent sets; None if cyclic."""
+    n = flow.n
+    cost = np.asarray(flow.cost, dtype=np.float64)
+    sel = np.asarray(flow.sel, dtype=np.float64)
+    succ: list[list[int]] = [[] for _ in range(n)]
+    indeg = [0] * n
+    for v in range(n):
+        for p in parents[v]:
+            succ[p].append(v)
+            indeg[v] += 1
+    anc = [set() for _ in range(n)]
+    ready = [v for v in range(n) if indeg[v] == 0]
+    seen = 0
+    work = list(indeg)
+    while ready:
+        u = ready.pop()
+        seen += 1
+        for w in succ[u]:
+            anc[w] |= anc[u] | {u}
+            work[w] -= 1
+            if work[w] == 0:
+                ready.append(w)
+    if seen != n:
+        return None  # cycle
+    total = 0.0
+    for v in range(n):
+        inp = float(np.prod(sel[sorted(anc[v])])) if anc[v] else 1.0
+        total += inp * cost[v]
+        if len(parents[v]) >= 2:
+            total += inp * mc
+    return total
+
+
+def _mimo_cost(mimo: MIMOFlow) -> tuple[float | None, list[Finding]]:
+    """Independent recomputation of the §5 union-merge volume model."""
+    findings: list[Finding] = []
+    n = len(mimo.segments)
+    par = [[] for _ in range(n)]
+    succ: list[list[int]] = [[] for _ in range(n)]
+    for a, b in mimo.seg_edges:
+        par[b].append(a)
+        succ[a].append(b)
+    per_tuple: list[float] = []
+    selprod: list[float] = []
+    for si, seg in enumerate(mimo.segments):
+        order = seg.current_order()
+        m = len(seg.cost)
+        if sorted(order) != list(range(m)):
+            findings.append(
+                Finding(
+                    rule="mimo-segment-order",
+                    severity="error",
+                    message=f"segment {si} order {order} is not a "
+                    f"permutation of range({m})",
+                    op=f"segment {si}",
+                )
+            )
+            return None, findings
+        placed = 0
+        pred = [0] * m
+        for a, b in seg.edges:
+            pred[b] |= 1 << a
+        for v in order:
+            if pred[v] & ~placed:
+                findings.append(
+                    Finding(
+                        rule="mimo-segment-order",
+                        severity="error",
+                        message=f"segment {si} order violates an "
+                        f"intra-segment precedence edge into task {v}",
+                        op=f"segment {si}",
+                    )
+                )
+                return None, findings
+            placed |= 1 << v
+        per_tuple.append(_linear_scm(seg.cost, seg.sel, order))
+        selprod.append(float(np.prod(np.asarray(seg.sel, dtype=np.float64))))
+    # Kahn volume recurrence: sources get 1.0, child += parent_vol*selprod.
+    indeg = [len(par[i]) for i in range(n)]
+    vol = [1.0 if indeg[i] == 0 else 0.0 for i in range(n)]
+    ready = [i for i in range(n) if indeg[i] == 0]
+    seen = 0
+    while ready:
+        u = ready.pop()
+        seen += 1
+        for w in succ[u]:
+            vol[w] += vol[u] * selprod[u]
+            indeg[w] -= 1
+            if indeg[w] == 0:
+                ready.append(w)
+    if seen != n:
+        findings.append(
+            Finding(
+                rule="mimo-seg-dag",
+                severity="error",
+                message="segment DAG contains a cycle",
+            )
+        )
+        return None, findings
+    return float(sum(v * p for v, p in zip(vol, per_tuple))), findings
+
+
+# ----------------------------------------------------------------- the check
+def verify_plan(
+    flow: Flow,
+    result: "api.PlanResult",
+    *,
+    cost_model: str | None = None,
+    tol: float = _TOL,
+) -> list[Finding]:
+    """Contract-check one optimizer result against its flow.
+
+    ``cost_model`` overrides the resolution chain (explicit argument >
+    ``result.metadata['cost_model']`` > registry lookup by optimizer name >
+    ``"linear"``).  Returns a list of findings; empty means the plan passed
+    every check.
+    """
+    findings: list[Finding] = []
+    meta: Mapping[str, Any] = getattr(result, "metadata", None) or {}
+    opt_name = meta.get("optimizer")
+    label = opt_name or "plan"
+    order = list(result.order)
+    n = flow.n
+
+    # 1. permutation
+    if sorted(order) != list(range(n)):
+        findings.append(
+            Finding(
+                rule="plan-permutation",
+                severity="error",
+                message=f"order {order} is not a permutation of range({n})",
+                flow=f"n={n}",
+                op=label,
+            )
+        )
+        return findings  # everything downstream assumes a permutation
+
+    # 2. precedence constraints — independent placed-bitmask scan
+    placed = 0
+    for v in order:
+        missing = flow.pred_mask[v] & ~placed
+        if missing:
+            pred = (missing & -missing).bit_length() - 1
+            findings.append(
+                Finding(
+                    rule="plan-pc-order",
+                    severity="error",
+                    message=f"task {v} scheduled before its predecessor "
+                    f"{pred}",
+                    flow=f"n={n}",
+                    op=label,
+                )
+            )
+            return findings
+        placed |= 1 << v
+
+    # 3./4. plan structure + cost under the entry's cost model
+    model = cost_model or meta.get("cost_model")
+    if model is None and opt_name is not None:
+        try:
+            model = api.get_optimizer(opt_name).cost_model
+        except KeyError:
+            model = None
+    model = model or "linear"
+
+    reported = float(result.scm)
+
+    def cost_mismatch(expected: float) -> None:
+        if not _close(expected, reported, tol):
+            findings.append(
+                Finding(
+                    rule="plan-cost",
+                    severity="error",
+                    message=f"reported {model} cost {reported!r} != "
+                    f"recomputed {expected!r} (tol={tol})",
+                    flow=f"n={n}",
+                    op=label,
+                )
+            )
+
+    def skipped(what: str) -> None:
+        findings.append(
+            Finding(
+                rule="plan-structure",
+                severity="info",
+                message=f"{model} cost check skipped: {what}; "
+                "permutation/PC checks passed",
+                flow=f"n={n}",
+                op=label,
+            )
+        )
+
+    if model == "linear":
+        cost_mismatch(_linear_scm(flow.cost, flow.sel, order))
+    elif model == "parallel":
+        kind = meta.get("plan_kind")
+        mc = float(meta.get("mc", 0.0))
+        if kind == "segmented":
+            cuts = [int(v) for v in meta.get("cuts", ())]
+            if not cuts_feasible(flow, order, cuts):
+                findings.append(
+                    Finding(
+                        rule="plan-cuts",
+                        severity="error",
+                        message=f"cut vector {cuts} is infeasible for the "
+                        "returned order (leading cut / PC-inside-segment / "
+                        "adjacent-parallel rules)",
+                        flow=f"n={n}",
+                        op=label,
+                    )
+                )
+            else:
+                plan = segments_to_plan(flow, order, cuts)
+                expected = _dag_scm(flow, plan.parents, mc)
+                assert expected is not None  # segments_to_plan is acyclic
+                cost_mismatch(expected)
+        elif kind == "dag":
+            parents = [set(p) for p in meta.get("parents", ())]
+            if len(parents) != n:
+                skipped(f"'dag' metadata has {len(parents)} parent sets")
+            else:
+                # the order must be a linear extension of the execution DAG
+                pos = {v: i for i, v in enumerate(order)}
+                bad = [
+                    (p, v)
+                    for v in range(n)
+                    for p in parents[v]
+                    if pos[p] >= pos[v]
+                ]
+                dag_ok = True
+                if bad:
+                    p, v = bad[0]
+                    findings.append(
+                        Finding(
+                            rule="plan-dag-order",
+                            severity="error",
+                            message=f"order is not a linear extension of "
+                            f"the execution DAG (parent {p} after child {v})",
+                            flow=f"n={n}",
+                            op=label,
+                        )
+                    )
+                    dag_ok = False
+                expected = _dag_scm(flow, parents, mc)
+                if expected is None:
+                    findings.append(
+                        Finding(
+                            rule="plan-dag-cycle",
+                            severity="error",
+                            message="execution DAG parent sets are cyclic",
+                            flow=f"n={n}",
+                            op=label,
+                        )
+                    )
+                elif dag_ok:
+                    cost_mismatch(expected)
+        else:
+            skipped("no cut vector / parent sets in metadata")
+    elif model == "mimo":
+        mimo = meta.get("mimo")
+        if not isinstance(mimo, MIMOFlow):
+            skipped("no MIMO state in metadata")
+        else:
+            # provenance tag *set* conservation (counts legitimately change
+            # under factorize/distribute)
+            want = set(flow_tags(flow))
+            got = {t for seg in mimo.segments for t in seg.tags}
+            if got != want:
+                findings.append(
+                    Finding(
+                        rule="mimo-tags",
+                        severity="error",
+                        message=f"provenance tag set changed: lost "
+                        f"{sorted(want - got)}, gained {sorted(got - want)}",
+                        flow=f"n={n}",
+                        op=label,
+                    )
+                )
+            expected, sub = _mimo_cost(mimo)
+            findings.extend(
+                Finding(
+                    rule=f.rule,
+                    severity=f.severity,
+                    message=f.message,
+                    flow=f"n={n}",
+                    op=label if f.op is None else f"{label}/{f.op}",
+                )
+                for f in sub
+            )
+            if expected is not None:
+                cost_mismatch(expected)
+    else:
+        skipped(f"unknown cost model {model!r}")
+
+    return findings
+
+
+# ------------------------------------------------------------ registry sweep
+def _tractable(opt: "api.RegisteredOptimizer", flow: Flow) -> bool:
+    """Exhaustive enumerators explode on large unconstrained flows even
+    inside their advertised ``max_n``; gate the sweep the way the service
+    planner does."""
+    if api.EXHAUSTIVE not in opt.tags:
+        return True
+    if flow.n > 12:
+        return False
+    return flow.n <= 9 or flow.pc_fraction() >= 0.2
+
+
+def verify_registry(
+    flows: Iterable[Flow],
+    optimizers: "Sequence[str] | None" = None,
+    *,
+    limit: "int | None" = None,
+    tol: float = _TOL,
+    opts: "Mapping[str, Mapping[str, Any]] | None" = None,
+) -> tuple[list[Finding], dict[str, int]]:
+    """Run every (supported, tractable) optimizer over ``flows`` and
+    verify each result.
+
+    ``optimizers`` restricts the sweep to the named entries; ``limit``
+    caps the number of flows; ``opts`` maps optimizer name to extra
+    keyword arguments (filtered to the fn's signature).  Returns
+    ``(findings, checked)`` where ``checked`` counts verified plans per
+    optimizer — a name with count 0 was never applicable, which the CLI
+    reports rather than silently passing.
+    """
+    import inspect
+
+    names = list(optimizers) if optimizers is not None else api.list_optimizers()
+    entries = [api.get_optimizer(name) for name in names]
+    findings: list[Finding] = []
+    checked = {name: 0 for name in names}
+    for i, flow in enumerate(flows):
+        if limit is not None and i >= limit:
+            break
+        for opt in entries:
+            if not opt.supports(flow) or not _tractable(opt, flow):
+                continue
+            kw: dict[str, Any] = {}
+            if opts and opt.name in opts:
+                params = inspect.signature(opt.fn).parameters
+                kw = {k: v for k, v in opts[opt.name].items() if k in params}
+            result = opt(flow, **kw)
+            for f in verify_plan(flow, result, tol=tol):
+                findings.append(
+                    Finding(
+                        rule=f.rule,
+                        severity=f.severity,
+                        message=f.message,
+                        flow=f"flow[{i}] n={flow.n}",
+                        op=opt.name,
+                    )
+                )
+            checked[opt.name] += 1
+    return findings, checked

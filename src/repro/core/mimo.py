@@ -34,6 +34,7 @@ from __future__ import annotations
 
 import copy
 import dataclasses
+import heapq
 import re
 from typing import Callable, Sequence
 
@@ -77,9 +78,38 @@ class Segment:
         return float(np.prod(self.sel))
 
     def current_order(self) -> list[int]:
-        return (
-            self.order if self.order is not None else list(range(len(self.cost)))
-        )
+        """The segment's execution order; when ``order`` is unset, a
+        *feasible* deterministic default.
+
+        Identity is the common case, but a segment built from a relabeled
+        flow (or any caller passing backward edges) can have identity
+        violate its own precedence edges — and every cost derived from an
+        infeasible order (``per_tuple_scm``, ``total_cost``) would then be
+        unachievable.  Falls back to smallest-id Kahn when identity is
+        infeasible."""
+        if self.order is not None:
+            return self.order
+        n = len(self.cost)
+        if all(a < b for a, b in self.edges):
+            return list(range(n))
+        indeg = [0] * n
+        succ: list[list[int]] = [[] for _ in range(n)]
+        for a, b in self.edges:
+            succ[a].append(b)
+            indeg[b] += 1
+        heap = [v for v in range(n) if indeg[v] == 0]
+        heapq.heapify(heap)
+        out: list[int] = []
+        while heap:
+            u = heapq.heappop(heap)
+            out.append(u)
+            for w in succ[u]:
+                indeg[w] -= 1
+                if indeg[w] == 0:
+                    heapq.heappush(heap, w)
+        if len(out) != n:
+            raise ValueError("intra-segment precedence edges form a cycle")
+        return out
 
     def per_tuple_scm(self) -> float:
         return scm(self.flow(), self.current_order())

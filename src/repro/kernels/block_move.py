@@ -137,6 +137,7 @@ def _kernel(
             masked = jnp.where(feasible, delta, inf)
             bestd_sizes.append(jnp.min(masked, axis=1, keepdims=True).T)
             bestt_sizes.append(
+                # lint: allow[bare-argmin] — per-row move target, not a winner pick
                 jnp.argmin(masked, axis=1, keepdims=True).astype(jnp.int32).T
             )
         bestd = jnp.concatenate(bestd_sizes, axis=0)  # (k, n+1)

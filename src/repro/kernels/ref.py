@@ -120,7 +120,10 @@ def _block_move_ref_row(cost, sel, pred, order, *, k: int, max_rounds: int):
             )
             masked = jnp.where(feasible, delta, inf)
             bestd_sizes.append(jnp.min(masked, axis=1))
-            bestt_sizes.append(jnp.argmin(masked, axis=1).astype(jnp.int32))
+            bestt_sizes.append(
+            # lint: allow[bare-argmin] — per-row move target, not a winner pick
+            jnp.argmin(masked, axis=1).astype(jnp.int32)
+        )
         bestd = jnp.stack(bestd_sizes)  # (k, n+1)
         bestt = jnp.stack(bestt_sizes)
         improving = bestd < eps

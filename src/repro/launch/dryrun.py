@@ -27,13 +27,18 @@ import os
 import sys
 
 
-def optimizer_dryrun() -> int:
+def optimizer_dryrun(verify_plans: bool = False) -> int:
     """Exercise every optimizer in the ``repro.optim`` registry by name.
 
     The serving/pipeline layers select plan optimizers from config strings;
     this sweep proves each registered algorithm lowers to a valid plan on
     the flows it claims to support — newly registered algorithms are
     covered automatically, mirroring the (arch x shape) model sweep below.
+
+    With ``verify_plans`` (CLI ``--verify-plans``) every result is
+    additionally contract-checked by ``repro.analysis.verify.verify_plan``
+    (independent f64 cost recomputation under the entry's cost model, cut
+    feasibility, MIMO legality); any error finding fails the gate.
 
     Defined (and dispatched from ``__main__``) *before* the XLA_FLAGS
     mutation and model-stack imports below: the registry sweep wants the
@@ -48,6 +53,9 @@ def optimizer_dryrun() -> int:
     from ..core.mimo import butterfly, flow_to_mimo, mimo_to_flow, optimize_mimo
     from ..core.parallel import pgreedy2
     from ..optim import get_optimizer, list_optimizers
+
+    if verify_plans:
+        from ..analysis.verify import verify_plan
 
     flows = [
         ("case_study", case_study_flow()),
@@ -96,6 +104,18 @@ def optimizer_dryrun() -> int:
                 failures += 1
                 print(f"[FAIL] {name}: invalid plan", file=sys.stderr)
                 continue
+            if verify_plans:
+                errs = [
+                    v for v in verify_plan(f, r) if v.severity == "error"
+                ]
+                if errs:
+                    failures += 1
+                    for v in errs:
+                        print(
+                            f"[FAIL] {name}: {v.rule}: {v.message}",
+                            file=sys.stderr,
+                        )
+                    continue
             if name == "batched-pgreedy" and r.scm > scm_pg2 + 1e-9:
                 failures += 1
                 print(
@@ -231,7 +251,7 @@ def service_dryrun() -> int:
 
 
 if __name__ == "__main__" and "--optimizers" in sys.argv:
-    raise SystemExit(optimizer_dryrun())
+    raise SystemExit(optimizer_dryrun("--verify-plans" in sys.argv))
 
 if __name__ == "__main__" and "--service" in sys.argv:
     raise SystemExit(service_dryrun())
@@ -582,6 +602,9 @@ def main(argv=None):
     ap.add_argument("--optimizers", action="store_true",
                     help="dry-run the repro.optim registry instead of "
                          "compiling model cells")
+    ap.add_argument("--verify-plans", action="store_true",
+                    help="with --optimizers: contract-check every result "
+                         "via repro.analysis.verify")
     ap.add_argument("--service", action="store_true",
                     help="dry-run the flow-optimization service (cache + "
                          "batched dispatch + drift loop)")
@@ -591,7 +614,7 @@ def main(argv=None):
         # CLI invocations dispatch at module top, before the XLA_FLAGS
         # mutation; this branch is a fallback for programmatic main() calls
         # (correct, merely slower under the 512-device host backend).
-        return optimizer_dryrun()
+        return optimizer_dryrun(args.verify_plans)
     if args.service:
         return service_dryrun()
 

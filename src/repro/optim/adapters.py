@@ -171,6 +171,7 @@ register(
     mimo_batch.batched_mimo,
     tags={APPROXIMATE, BATCHABLE},
     supports=mimo_batch.supports_batched_mimo,
+    cost_model="mimo",
     doc="Population-batched §5 factorize/distribute + per-segment RO-III "
     "over an encoded MIMO population; member 0 replays scalar optimize_mimo "
     "move-for-move, so it is never worse than the scalar §5 search.",
@@ -186,6 +187,7 @@ register(
     "batched-pgreedy",
     parallel_batch.batched_pgreedy,
     tags={APPROXIMATE, HANDLES_CONSTRAINTS, BATCHABLE},
+    cost_model="parallel",
     doc="Greedy repartition of a population of (order, partition) pairs in "
     "one vmapped device call; the scalar PGreedyI/II and Algorithm-3 DAGs "
     "ride in the candidate pool, so it is never worse than pgreedy2 (§6.1).",
@@ -194,6 +196,7 @@ register(
     "parallel-portfolio",
     parallel_batch.parallel_portfolio,
     tags={APPROXIMATE, HANDLES_CONSTRAINTS, BATCHABLE, STOCHASTIC},
+    cost_model="parallel",
     doc="Registry-seeded orders x {linear, Algorithm-3, random} partitions, "
     "device cut hill-climb + elite order mutation per generation (§6).",
 )

@@ -23,6 +23,7 @@ calling convention:
 from __future__ import annotations
 
 import dataclasses
+import inspect
 import time
 from typing import Any, Callable, Iterable, Mapping, Protocol, runtime_checkable
 
@@ -88,6 +89,19 @@ class RegisteredOptimizer:
     ``max_n`` bounds the flow sizes enumeration-based algorithms are offered
     for (``supports`` returns False beyond it); ``supports_fn`` adds
     structural checks (e.g. KBZ needs a forest-shaped PC).
+
+    ``cost_model`` names the objective the reported cost is measured in:
+    ``"linear"`` (the order's sequential SCM), ``"parallel"`` (the winning
+    execution DAG's ``scm_parallel``) or ``"mimo"`` (the §5 union-merge
+    volume model).  Consumers that compare or verify costs — the benchmark
+    sweep, ``repro.analysis.verify`` — dispatch on it instead of keeping
+    per-name sets.
+
+    Core fns that accept a keyword-only ``_details`` dict report *plan
+    structure* the ``(order, cost)`` convention cannot carry (cut vectors,
+    DAG parents, MIMO segment state).  ``__call__`` passes a fresh dict and
+    merges it into ``PlanResult.metadata``; ``raw`` and direct calls keep
+    the legacy 2-tuple untouched.
     """
 
     name: str
@@ -96,6 +110,7 @@ class RegisteredOptimizer:
     doc: str = ""
     max_n: int | None = None
     supports_fn: Callable[[Flow], bool] | None = None
+    cost_model: str = "linear"
 
     def supports(self, flow: Flow) -> bool:
         if self.max_n is not None and flow.n > self.max_n:
@@ -104,13 +119,28 @@ class RegisteredOptimizer:
             return False
         return True
 
+    def _takes_details(self) -> bool:
+        try:
+            return "_details" in inspect.signature(self.fn).parameters
+        except (TypeError, ValueError):  # builtins / C callables
+            return False
+
     def __call__(self, flow: Flow, **opts: Any) -> PlanResult:
         t0 = time.perf_counter()
-        order, cost = self.fn(flow, **opts)
+        details: dict[str, Any] = {}
+        if self._takes_details():
+            order, cost = self.fn(flow, _details=details, **opts)
+        else:
+            order, cost = self.fn(flow, **opts)
         dt = time.perf_counter() - t0
-        meta: dict[str, Any] = {"optimizer": self.name, "n": flow.n}
+        meta: dict[str, Any] = {
+            "optimizer": self.name,
+            "n": flow.n,
+            "cost_model": self.cost_model,
+        }
         if opts:
             meta["opts"] = dict(opts)
+        meta.update(details)
         return PlanResult(tuple(order), float(cost), dt, meta)
 
     def raw(self, flow: Flow, **opts: Any) -> tuple[list[int], float]:
@@ -130,11 +160,14 @@ def register(
     doc: str = "",
     max_n: int | None = None,
     supports: Callable[[Flow], bool] | None = None,
+    cost_model: str = "linear",
     overwrite: bool = False,
 ) -> RegisteredOptimizer:
     """Register ``fn`` (core convention ``flow -> (order, cost)``) by name."""
     if name in _REGISTRY and not overwrite:
         raise ValueError(f"optimizer {name!r} already registered")
+    if cost_model not in ("linear", "parallel", "mimo"):
+        raise ValueError(f"unknown cost model {cost_model!r}")
     entry = RegisteredOptimizer(
         name=name,
         fn=fn,
@@ -142,6 +175,7 @@ def register(
         doc=doc,
         max_n=max_n,
         supports_fn=supports,
+        cost_model=cost_model,
     )
     _REGISTRY[name] = entry
     return entry

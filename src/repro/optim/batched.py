@@ -58,22 +58,35 @@ __all__ = [
 _IMPROVE_EPS = -1e-12  # same strict-improvement threshold as core.rank
 
 
-def argmin_lowest_index(costs) -> int:
+def argmin_lowest_index(costs):
     """Winner selection for population searches: the member with minimum
     cost, ties broken by the LOWEST member index.
 
     This is the tie-breaking contract every population path shares — the
     single-device host argmin here, the service batcher's per-request
-    argmin, and the sharded searches' device-side all-reduce argmin
-    (``optim.sharded._global_argmin``) all pick the same member, so a
-    plan served for a tied population is reproducible across paths and
-    shard counts.  (``np.argmin``/``jnp.argmin`` return the first
-    minimum; this helper pins that behavior as API rather than accident.)
+    argmin, the in-jit device form below, and the sharded searches'
+    device-side all-reduce argmin (``optim.sharded._global_argmin``) all
+    pick the same member, so a plan served for a tied population is
+    reproducible across paths and shard counts.  (``np.argmin``/
+    ``jnp.argmin`` return the first minimum; this helper pins that
+    behavior as API rather than accident.)
+
+    Host inputs (lists, numpy arrays) return a Python ``int``; jax arrays
+    and tracers return an int32 device scalar, so jitted/vmapped search
+    bodies (``parallel_batch._cut_climb_row``, the block-move target pick)
+    can route their winner selection through the same contract.
     """
+    if isinstance(costs, jax.Array):  # device array or tracer: stay on device
+        if costs.ndim != 1 or costs.shape[0] == 0:
+            raise ValueError(
+                f"costs must be a non-empty vector; got {costs.shape}"
+            )
+        # first minimum == lowest index: the contract, in device form
+        return jnp.argmin(costs)  # lint: allow[bare-argmin]
     arr = np.asarray(costs)
     if arr.ndim != 1 or arr.size == 0:
         raise ValueError(f"costs must be a non-empty vector; got {arr.shape}")
-    return int(np.argmin(arr))
+    return int(np.argmin(arr))  # lint: allow[bare-argmin] — contract impl
 
 
 @jax.jit
@@ -193,7 +206,9 @@ def _block_move_pass_row(
         badcum = jnp.concatenate([i32(jnp.zeros(1)), jnp.cumsum(bad)])
         feasible = (idx1 > e) & (badcum == badcum[e]) & (s + size <= n)
         masked = jnp.where(feasible, delta, jnp.inf)
-        tbest = i32(jnp.argmin(masked))
+        # lowest-target tie-break on equal deltas, same contract as the
+        # population winner pick
+        tbest = i32(argmin_lowest_index(masked))
         apply = masked[tbest] < _IMPROVE_EPS
         # permutation update: A|B|M|R -> A|M|B|R
         msize = tbest - e

@@ -546,6 +546,7 @@ def batched_mimo(
     max_rounds: int = 10,
     seed: int = 0,
     k: int = 5,
+    _details: "dict | None" = None,
 ) -> tuple[list[int], float]:
     """Registry entry: batched §5 MIMO search on a flattened MIMO flow.
 
@@ -564,6 +565,10 @@ def batched_mimo(
     )
     order = _linearize(flow, res.mimo)
     assert flow.is_valid_order(order)
+    if _details is not None:
+        # plan structure for repro.analysis.verify: the optimized MIMO
+        # state, so the reported §5 cost can be recomputed independently
+        _details.update(plan_kind="mimo", mimo=res.mimo, member=res.member)
     return order, res.cost
 
 

@@ -156,7 +156,8 @@ def _cut_climb_row(cost, sel, pred, order, cuts0, mc, *, max_steps: int):
         flips = st["cuts"][None, :] ^ eye  # candidate i flips cut point i
         totals, feas = _segment_eval(c, s, M, flips, mc)
         totals = jnp.where(feas, totals, jnp.inf)
-        i = jnp.argmin(totals)
+        # deterministic tie-break (lowest cut index) via the shared contract
+        i = argmin_lowest_index(totals)
         improved = totals[i] < st["best"] + _IMPROVE_EPS
         return {
             "cuts": jnp.where(improved, flips[i], st["cuts"]),
@@ -343,6 +344,7 @@ def batched_pgreedy(
     mc: float = 0.0,
     population: int = 64,
     seed: int = 0,
+    _details: "dict | None" = None,
 ) -> tuple[list[int], float]:
     """Population-batched §6 search over (order, partition) pairs.
 
@@ -352,6 +354,12 @@ def batched_pgreedy(
     Algorithm-3 DAGs batched alongside — so the result is never worse than
     ``pgreedy2`` (its plan is in the candidate pool).  Returns (topological
     order of the winning DAG, its parallel SCM).
+
+    ``_details`` (the registry's plan-structure out-param) receives the
+    winning DAG itself — either ``plan_kind="segmented"`` with the cut
+    vector or ``plan_kind="dag"`` with explicit parent sets — so
+    ``repro.analysis.verify`` can recompute the reported parallel SCM from
+    structure instead of trusting it.
     """
     rng = random.Random(seed)
     orders = _seed_orders(
@@ -375,7 +383,17 @@ def batched_pgreedy(
     if costs[j] < best:
         plan = plans[j]
         best = scm_parallel(plan, mc=mc)  # exact f64 host re-score
+        if _details is not None:
+            _details.update(
+                plan_kind="dag",
+                parents=[sorted(p) for p in plan.parents],
+                mc=float(mc),
+            )
         return plan.topological_order(), float(best)
+    if _details is not None:
+        _details.update(
+            plan_kind="segmented", cuts=[int(v) for v in cut], mc=float(mc)
+        )
     return order, float(best)
 
 
@@ -387,6 +405,7 @@ def parallel_portfolio(
     elites: int = 16,
     seed: int = 0,
     seed_names: "list[str] | None" = None,
+    _details: "dict | None" = None,
 ) -> tuple[list[int], float]:
     """Registry-seeded portfolio over the segmented parallel-plan family.
 
@@ -395,6 +414,8 @@ def parallel_portfolio(
     each generation greedy-repartitions the population on device, keeps the
     elite (order, cuts) rows and mutates elite orders with the RO-III block
     move set.  Returns (order of the best DAG found, its parallel SCM).
+    ``_details`` receives the winning segmented encoding (see
+    :func:`batched_pgreedy`).
     """
     rng = random.Random(seed)
     seeds = _seed_orders(flow, rng, max(4, population // 4), names=seed_names)
@@ -411,6 +432,7 @@ def parallel_portfolio(
         return rows[:population]
 
     best_order: list[int] | None = None
+    best_cut: list[int] | None = None
     best_cost = np.inf
     orders = seeds
     for _ in range(max(1, generations)):
@@ -426,7 +448,7 @@ def parallel_portfolio(
             cut = [int(v) for v in out_cuts[i]]
             exact = scm_parallel(segments_to_plan(flow, o, cut), mc=mc)
             if exact < best_cost:
-                best_cost, best_order = exact, o
+                best_cost, best_order, best_cut = exact, o, cut
         elite = [[int(v) for v in arr_o[i]] for i in idx[:elites]]
         nxt = list(elite)
         while len(nxt) < max(4, population // 4):
@@ -434,4 +456,8 @@ def parallel_portfolio(
             nxt.append(_mutate(parent, flow, rng, moves=rng.randint(1, 4)))
         orders = nxt
     assert best_order is not None and flow.is_valid_order(best_order)
+    if _details is not None:
+        _details.update(
+            plan_kind="segmented", cuts=list(best_cut), mc=float(mc)
+        )
     return best_order, float(best_cost)

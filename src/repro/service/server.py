@@ -93,6 +93,11 @@ class FlowOptimizationService:
     bucket neighbors, re-validated and re-scored on the requesting flow.
     ``max_batch`` caps requests per fused bucket dispatch (None:
     unbounded).
+
+    ``verify=True`` (debug) contract-checks every served result with
+    ``repro.analysis.verify.verify_plan`` — permutation, PC order, and an
+    independent f64 cost recomputation under the optimizer's cost model —
+    and raises on any violation before the result reaches the caller.
     """
 
     def __init__(
@@ -102,12 +107,15 @@ class FlowOptimizationService:
         max_batch: int | None = None,
         exact: bool = True,
         default_optimizer: str = "batched-ro3",
+        verify: bool = False,
     ):
         self.cache = PlanCache(cache_size)
         self.resolution = resolution
         self.max_batch = max_batch
         self.exact = exact
         self.default_optimizer = default_optimizer
+        self.verify = verify
+        self.verified_plans = 0  # results contract-checked before serving
         self._queue: list[_Pending] = []
         self._results: dict[int, OptimizeResult] = {}
         self._next_ticket = 0
@@ -184,7 +192,7 @@ class FlowOptimizationService:
         self.device_passes += 1
         order = fp.to_original(order_c)
         assert flow.is_valid_order(order)
-        return OptimizeResult(
+        result = OptimizeResult(
             order=tuple(order),
             scm=float(cost),
             optimizer=name,
@@ -194,6 +202,9 @@ class FlowOptimizationService:
             batch_size=1,
             wall_time_s=time.perf_counter() - t0,
         )
+        if self.verify:
+            self._verify_served(flow, result)
+        return result
 
     # ------------------------------------------------------------------ flush
     def flush(self) -> dict[int, OptimizeResult]:
@@ -312,7 +323,7 @@ class FlowOptimizationService:
             from ..core.cost import scm
 
             cost = float(scm(req.flow, order))
-        return OptimizeResult(
+        result = OptimizeResult(
             order=tuple(order),
             scm=cost,
             optimizer=req.optimizer,
@@ -322,6 +333,38 @@ class FlowOptimizationService:
             batch_size=batch_size,
             wall_time_s=time.perf_counter() - t0,
         )
+        if self.verify:
+            self._verify_served(req.flow, result)
+        return result
+
+    def _verify_served(self, flow: Flow, result: OptimizeResult) -> None:
+        """Contract-check one result before it is served (``verify=True``).
+
+        Cache-served plans carry no plan structure, so for parallel/MIMO
+        cost models the independent cost recomputation degrades to an
+        info-severity skip — permutation and PC checks always run.
+        """
+        from ..analysis.findings import render_text
+        from ..analysis.verify import verify_plan
+
+        shim = api.PlanResult(
+            order=tuple(result.order),
+            scm=float(result.scm),
+            wall_time_s=result.wall_time_s,
+            metadata={
+                "optimizer": result.optimizer,
+                "cost_model": api.get_optimizer(result.optimizer).cost_model,
+            },
+        )
+        # bucket-neighbor re-scored plans are linear SCM by construction
+        model = "linear" if (not self.exact and result.cache_hit) else None
+        findings = verify_plan(flow, shim, cost_model=model)
+        errors = [f for f in findings if f.severity == "error"]
+        if errors:
+            raise RuntimeError(
+                "served plan failed verification:\n" + render_text(errors)
+            )
+        self.verified_plans += 1
 
     # ------------------------------------------------------------ drift hook
     def watch(

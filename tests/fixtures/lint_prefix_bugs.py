@@ -1,0 +1,40 @@
+"""Lint fixture: pre-fix bug patterns each ``repro.analysis lint`` rule
+encodes.  This file is *test data* — it reproduces shipped-then-fixed code
+shapes (notably the bare population argmin from the §6 cut-climb winner
+pick) and must keep tripping every rule.  It is never imported.
+"""
+import jax
+import jax.numpy as jnp
+
+from jax.experimental import enable_x64
+
+
+def pick_winner(totals, flips, st):
+    # pre-fix parallel_batch._cut_climb_row: backend tie behavior decided
+    # which cut-vector won instead of the lowest-index contract
+    i = jnp.argmin(totals)
+    return flips[i], totals[i]
+
+
+def bucket(flow_bytes):
+    # builtin hash is salted per process: cache keys don't survive restarts
+    return hash(flow_bytes) % 64
+
+
+def sample_population(n):
+    key = jax.random.PRNGKey(0)
+    a = jax.random.uniform(key, (n,))
+    b = jax.random.normal(key, (n,))  # key reused: a and b are correlated
+    return a, b
+
+
+def exact_costs(flow):
+    with enable_x64():
+        c = jnp.asarray(flow.cost)  # dtype-less: f32 outside the ctx
+        s = jnp.asarray(flow.sel, dtype=jnp.float64)
+        return c, s
+
+
+def allowed_winner(totals):
+    # the pragma escape must keep suppressing the rule
+    return jnp.argmin(totals)  # lint: allow[bare-argmin] — fixture escape

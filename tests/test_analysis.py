@@ -1,0 +1,305 @@
+"""repro.analysis: effect inference, plan verification and lint gates.
+
+Covers the three passes end to end: inferred effects must reproduce the
+hand-declared read/write sets of both op libraries exactly (the PR 7
+audit, pinned), verify_plan must accept every registered optimizer's
+output on a mixed workload and reject mutated plans, and the lint rules
+must flag the pre-fix fixture while leaving ``src/`` clean at HEAD.
+"""
+import dataclasses
+import os
+
+import pytest
+
+from repro.analysis import analyze_ops, exit_code, verify_plan, verify_registry
+from repro.analysis.effects import infer_effects
+from repro.analysis.findings import Finding, render_json, render_text
+from repro.analysis.lint import lint_paths, lint_source
+from repro.core import random_flow, scm, workload_mixture
+from repro.optim import get_optimizer
+from repro.pipeline.case_study import case_study_ops
+from repro.pipeline.loader import doc_flow_ops
+from repro.pipeline.ops import PipelineOp
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+SRC = os.path.join(os.path.dirname(HERE), "src")
+FIXTURE = os.path.join(HERE, "fixtures", "lint_prefix_bugs.py")
+
+
+# ------------------------------------------------------------------ effects
+def test_effects_reproduce_case_study_declarations():
+    """The PR 7 audit, pinned: inference agrees with every hand-declared
+    effect set of the §3 case study — no unsound or over-constrained op."""
+    reports, findings = analyze_ops(case_study_ops())
+    assert not [f for f in findings if f.severity in ("error", "warning")], (
+        render_text(findings)
+    )
+    for rep in reports:
+        assert rep.method.startswith("trace"), rep  # no AST/declared fallback
+        assert rep.matches_declaration(), rep
+
+
+def test_effects_reproduce_doc_flow_declarations():
+    reports, findings = analyze_ops(doc_flow_ops(doc_len=32))
+    assert not [f for f in findings if f.severity in ("error", "warning")], (
+        render_text(findings)
+    )
+    for rep in reports:
+        assert rep.method.startswith("trace"), rep
+        assert rep.matches_declaration(), rep
+
+
+def test_effects_under_declared_read_is_unsound():
+    def fn(fields):
+        return {"c": fields["a"] + fields["b"]}, None
+
+    op = PipelineOp("bad", fn, reads={"a"}, writes={"c"})
+    rep = infer_effects(op, {"a", "b", "c"})
+    assert "b" in rep.inferred_reads
+    _, findings = analyze_ops([op])
+    rules = {f.rule for f in findings if f.severity == "error"}
+    assert "effect-unsound-read" in rules
+
+
+def test_effects_under_declared_write_is_unsound():
+    def fn(fields):
+        return {"c": fields["a"], "d": fields["a"] * 2}, None
+
+    op = PipelineOp("bad", fn, reads={"a"}, writes={"c"})
+    _, findings = analyze_ops([op])
+    rules = {f.rule for f in findings if f.severity == "error"}
+    assert "effect-unsound-write" in rules
+
+
+def test_effects_over_declared_read_is_flagged():
+    def fn(fields):
+        return {"c": fields["a"]}, None
+
+    op = PipelineOp("wide", fn, reads={"a", "b"}, writes={"c"})
+    _, findings = analyze_ops([op])
+    assert any(
+        f.rule == "effect-over-read" and f.severity == "warning"
+        for f in findings
+    )
+
+
+def test_effects_hidden_dependency_surfaces_missing_pc_edge():
+    """An undeclared read that crosses ops must surface as a missing PC
+    edge — the exact class of bug that silently corrupts reorders."""
+    def writer(fields):
+        return {"x": fields["a"] * 2}, None
+
+    def reader(fields):
+        return {"y": fields["x"] + 1}, None
+
+    ops = [
+        PipelineOp("w", writer, reads={"a"}, writes={"x"}),
+        PipelineOp("r", reader, reads={"a"}, writes={"y"}),  # hides x
+    ]
+    _, findings = analyze_ops(ops)
+    assert any(
+        f.rule == "pc-missing-edge" and f.severity == "error"
+        for f in findings
+    ), render_text(findings)
+
+
+# ------------------------------------------------------------------- verify
+def test_verify_accepts_every_registered_optimizer_on_mixture():
+    """Test-sized acceptance sweep (the CLI runs the full 256 flows):
+    every registry entry's plan verifies on a mixed workload, and the
+    batched/kernel/sharded entries are actually exercised."""
+    flows = workload_mixture(0, n_requests=16, size_range=(6, 14))
+    findings, checked = verify_registry(flows)
+    errors = [f for f in findings if f.severity == "error"]
+    assert not errors, render_text(errors)
+    for name in ("kernel-ro3", "batched-mimo", "batched-pgreedy", "sharded-ro3"):
+        assert checked.get(name, 0) > 0, (name, checked)
+
+
+def test_verify_rejects_non_permutation():
+    f = random_flow(8, 0.3, rng=1)
+    r = get_optimizer("ro3")(f)
+    bad = dataclasses.replace(r, order=r.order[:-1] + (r.order[0],))
+    assert any(v.rule == "plan-permutation" for v in verify_plan(f, bad))
+
+
+def test_verify_rejects_pc_violation():
+    f = random_flow(10, 0.5, rng=2)
+    r = get_optimizer("ro3")(f)
+    j, k = f.edges[0]  # j must precede k: swap them in the served order
+    order = list(r.order)
+    pj, pk = order.index(j), order.index(k)
+    order[pj], order[pk] = order[pk], order[pj]
+    bad = dataclasses.replace(r, order=tuple(order))
+    assert any(
+        v.rule == "plan-pc-order" and v.severity == "error"
+        for v in verify_plan(f, bad)
+    )
+
+
+def test_verify_rejects_corrupted_cost_per_model():
+    """The reported cost is recomputed from structure in all three cost
+    models; an off-by-1% report must fail in each."""
+    from repro.core import butterfly, butterfly_mimo_segments, mimo_to_flow
+
+    lin = random_flow(10, 0.3, rng=3)
+    mimo_flow = mimo_to_flow(butterfly(butterfly_mimo_segments(3, 4, 0.4, rng=7)))
+    assert get_optimizer("batched-mimo").supports(mimo_flow)
+    cases = [("ro3", lin), ("batched-pgreedy", lin), ("batched-mimo", mimo_flow)]
+    for name, f in cases:
+        r = get_optimizer(name)(f)
+        assert not [
+            v for v in verify_plan(f, r) if v.severity == "error"
+        ], name
+        bad = dataclasses.replace(r, scm=r.scm * 1.01 + 1.0)
+        rules = {v.rule for v in verify_plan(f, bad) if v.severity == "error"}
+        assert rules & {"plan-cost", "mimo-tags"} or "plan-cost" in rules, (
+            name,
+            rules,
+        )
+
+
+def test_verify_rejects_infeasible_cuts():
+    f = random_flow(12, 0.4, rng=1)
+    r = get_optimizer("batched-pgreedy")(f)
+    if r.metadata.get("plan_kind") != "segmented":
+        pytest.skip("winner was a DAG plan for this seed")
+    cuts = list(r.metadata["cuts"])
+    # drop every interior cut: one giant segment almost surely breaks the
+    # within-segment independence requirement on a 40%-PC flow
+    bad_meta = dict(r.metadata, cuts=[True] + [False] * (len(cuts) - 1))
+    bad = dataclasses.replace(r, metadata=bad_meta)
+    rules = {v.rule for v in verify_plan(f, bad) if v.severity == "error"}
+    assert rules & {"plan-cuts", "plan-cost"}, rules
+
+
+def test_verify_plan_property_sweep():
+    """Every heuristic's plan on random flows verifies; a random adjacent
+    transposition that breaks PC is always caught."""
+    import random as _random
+
+    for seed in range(12):
+        f = random_flow(6 + seed % 7, 0.2 + 0.05 * (seed % 5), rng=seed)
+        r = get_optimizer("greedy2" if seed % 2 else "ro2")(f)
+        assert not [v for v in verify_plan(f, r) if v.severity == "error"]
+        order = list(r.order)
+        rng = _random.Random(seed)
+        pos = {t: i for i, t in enumerate(order)}
+        broken = [(j, k) for j, k in f.edges if pos[j] + 1 == pos[k]]
+        if not broken:
+            continue
+        j, k = rng.choice(broken)
+        order[pos[j]], order[pos[k]] = order[pos[k]], order[pos[j]]
+        bad = dataclasses.replace(
+            r, order=tuple(order), scm=scm(f, order)
+        )
+        assert any(
+            v.rule == "plan-pc-order" for v in verify_plan(f, bad)
+        ), (seed, (j, k))
+
+
+def test_verify_missing_structure_is_info_not_pass():
+    f = random_flow(8, 0.3, rng=5)
+    # a parallel-model result stripped of its plan structure cannot be
+    # cost-checked: verify must say so (info) instead of silently passing
+    full = get_optimizer("batched-pgreedy")(f)
+    stripped = dataclasses.replace(
+        full, metadata={"optimizer": "batched-pgreedy", "cost_model": "parallel"}
+    )
+    vs = verify_plan(f, stripped)
+    assert any(v.rule == "plan-structure" and v.severity == "info" for v in vs)
+    assert not [v for v in vs if v.severity == "error"]
+
+
+# --------------------------------------------------------------------- lint
+def test_lint_fixture_flags_all_rules():
+    findings = lint_paths([FIXTURE])
+    assert exit_code(findings) == 1
+    rules = {f.rule for f in findings}
+    assert rules == {
+        "bare-argmin",
+        "builtin-hash",
+        "prng-key-reuse",
+        "x64-asarray-dtype",
+    }
+    assert all(f.severity == "error" for f in findings)
+    # the pragma'd argmin at the bottom of the fixture stays suppressed
+    assert len([f for f in findings if f.rule == "bare-argmin"]) == 1
+
+
+def test_lint_src_tree_clean_at_head():
+    findings = lint_paths([os.path.join(SRC, "repro")])
+    assert findings == [], render_text(findings)
+
+
+def test_lint_negatives_not_flagged():
+    clean = """
+import random
+import jax
+import jax.numpy as jnp
+
+def ok(costs, key, items):
+    i = jnp.argmin(costs, axis=1)          # axis= argmin: a reduction
+    r = random.Random(0).random()          # stdlib random, not jax.random
+    h = items.hash()                       # method named hash, not builtin
+    for step in range(3):
+        key = jax.random.fold_in(key, step)   # fold_in derives, not consumes
+        key, sub = jax.random.split(key)      # reassigned before reuse
+        x = jax.random.uniform(sub, (3,))
+    return i, r, h, x
+"""
+    assert lint_source(clean, "clean.py") == []
+
+
+def test_lint_pragma_escape_and_reuse_detection():
+    bad = (
+        "import jax.numpy as jnp\n"
+        "def f(c):\n"
+        "    return jnp.argmin(c)\n"
+    )
+    assert [f.rule for f in lint_source(bad, "b.py")] == ["bare-argmin"]
+    ok = bad.replace("argmin(c)", "argmin(c)  # lint: allow[bare-argmin]")
+    assert lint_source(ok, "b.py") == []
+
+
+def test_lint_syntax_error_is_reported_not_raised():
+    findings = lint_source("def broken(:\n", "broken.py")
+    assert [f.rule for f in findings] == ["syntax-error"]
+    assert exit_code(findings) == 1
+
+
+# ----------------------------------------------------------- findings + CLI
+def test_finding_model_and_renderers():
+    with pytest.raises(ValueError):
+        Finding(rule="x", severity="fatal", message="nope")
+    fs = [
+        Finding(rule="a", severity="info", message="i", file="f.py", line=1),
+        Finding(rule="b", severity="error", message="e"),
+    ]
+    assert exit_code(fs) == 1
+    assert exit_code(fs[:1]) == 0
+    text = render_text(fs)
+    assert text.splitlines()[0].startswith("ERROR")  # severity-desc order
+    import json
+
+    parsed = json.loads(render_json(fs))
+    assert {p["rule"] for p in parsed} == {"a", "b"}
+
+
+def test_cli_lint_and_verify():
+    from repro.analysis.cli import main
+
+    assert main(["lint", FIXTURE]) == 1
+    assert main(["lint", os.path.join(SRC, "repro", "analysis")]) == 0
+    assert main(["verify", "--flows", "4", "--optimizers", "ro3", "greedy2"]) == 0
+
+
+# ----------------------------------------------------- service verify wiring
+def test_service_serves_verified_plans():
+    from repro.service.server import FlowOptimizationService
+
+    flows = workload_mixture(7, n_requests=12, size_range=(5, 10))
+    svc = FlowOptimizationService(verify=True)
+    served = svc.serve(flows, optimizer="batched-ro3", population=8, seed=0)
+    assert len(served) == len(flows)
+    assert svc.verified_plans >= len(flows)  # cache hits are re-verified too

@@ -350,9 +350,14 @@ def test_move_legality_tagged_tail_mismatch():
 def test_move_legality_distribute_head_guards():
     assert move_candidate(_two_parent_join(head_sel=1.2), "distribute", 2) is None
     m = _two_parent_join()
-    # default identity order: the head task now has a within-segment pred
+    # pinned order whose head task has a within-segment pred (the feasible
+    # default order would place the unbound task 1 first and legally
+    # distribute it, so the guard needs an explicit order to trigger)
     m.segments[2].edges = ((1, 0),)
+    m.segments[2].order = [0, 1]
     assert move_candidate(m, "distribute", 2) is None
+    # with the order unset, the feasible default heads the unbound task
+    assert move_candidate(_two_parent_join(), "distribute", 2) is not None
     m2 = _two_parent_join()
     assert move_candidate(m2, "distribute", 2).rec.tag == 5
 
